@@ -1,0 +1,54 @@
+"""Beyond-paper benchmark extensions.
+
+* ``store_capacity_study`` — MM Store hit rate & TTFT vs store capacity
+  (the cache-sizing question the paper's Mooncake-backed store raises but
+  does not answer).
+* ``stage_breakdown`` — per-deployment TTFT decomposition (queue / encode
+  / E->P dispatch / prefill): shows WHY each deployment wins or loses,
+  not just that it does.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from repro.configs import get_config
+from repro.core.simulator import SHAREGPT_4O, SimConfig, Simulator, \
+    gen_requests, simulate
+
+MODEL = "openpangu-7b-vl"
+
+
+def store_capacity_study() -> List[str]:
+    model = get_config(MODEL)
+    ds = dataclasses.replace(SHAREGPT_4O, unique_images=64)
+    rows = ["store_capacity,capacity_features,hit_rate,ttft_ms"]
+    from repro.core.costmodel import CostModel
+    feat_bytes = int(CostModel(model).feature_bytes(644))
+    for cap_features in (4, 16, 64, 0):          # 0 => unbounded
+        cfg = SimConfig(deployment="E-P-D")
+        sim = Simulator(model, cfg)
+        if cap_features:
+            sim.store.capacity = cap_features * feat_bytes
+        reqs = gen_requests(ds, 256, rate=4.0, seed=17)
+        m = sim.run(reqs)
+        rows.append(f"store_capacity,{cap_features or 'inf'},"
+                    f"{m.store_hit_rate:.3f},{m.mean_ttft_ms:.1f}")
+    return rows
+
+
+def stage_breakdown() -> List[str]:
+    model = get_config(MODEL)
+    rows = ["stage_breakdown,deployment,encode_queue_ms,encode_ms,"
+            "dispatch_ms,prefill_ms"]
+    for dep in ("TP1", "EP-D", "(E-P)-D", "(E-D)-P", "E-P-D"):
+        m = simulate(model, dep, SHAREGPT_4O, rate=6.0, n_requests=192,
+                     seed=23)
+        b = m.stage_breakdown_ms()
+        rows.append(f"stage_breakdown,{dep},{b['encode_queue']:.1f},"
+                    f"{b['encode']:.1f},{b['dispatch']:.1f},"
+                    f"{b['prefill']:.1f}")
+    return rows
+
+
+EXTENSION_BENCHMARKS = [store_capacity_study, stage_breakdown]

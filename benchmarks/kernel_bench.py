@@ -1,0 +1,99 @@
+"""Kernel / engine microbenchmarks (CPU-executable path).
+
+Times the jnp reference implementations (the CPU stand-ins for the Pallas
+kernels — the kernels themselves only run for real on TPU; interpret mode
+timing is meaningless) and the end-to-end engine steps on reduced configs.
+Rows: name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, iters: int = 5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_kernels() -> List[str]:
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    from repro.kernels.flash_attention.ref import attention_ref
+    from repro.kernels.ssd_scan.ref import ssd_ref
+
+    rows = ["kernel,us_per_call,derived"]
+    key = jax.random.PRNGKey(0)
+
+    b, s, nq, nkv, hd = 2, 512, 8, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, nq, hd))
+    k = jax.random.normal(ks[1], (b, s, nkv, hd))
+    v = jax.random.normal(ks[2], (b, s, nkv, hd))
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    fa = jax.jit(lambda *a: attention_ref(*a))
+    us = _time(fa, q, k, v, pos, pos)
+    flops = 4 * b * nq * s * (s / 2) * hd
+    rows.append(f"flash_attention_ref_b{b}_s{s},{us:.0f},"
+                f"{flops / us / 1e3:.1f}_gflops")
+
+    S = 4096
+    kd = jax.random.normal(ks[1], (b, S, nkv, hd))
+    vd = jax.random.normal(ks[2], (b, S, nkv, hd))
+    kp = jnp.broadcast_to(jnp.arange(S), (b, S))
+    qd = jax.random.normal(ks[0], (b, nq, hd))
+    qp = jnp.array([S - 1] * b)
+    da = jax.jit(lambda *a: decode_attention_ref(*a))
+    us = _time(da, qd, kd, vd, qp, kp)
+    kv_bytes = b * S * nkv * hd * 2 * 4
+    rows.append(f"decode_attention_ref_b{b}_S{S},{us:.0f},"
+                f"{kv_bytes / us / 1e3:.1f}_GBps_kvread")
+
+    B, L, H, P, N, chunk = 2, 1024, 4, 64, 64, 128
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (B, L, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    bm = jax.random.normal(ks[3], (B, L, N)) * 0.3
+    cm = jax.random.normal(ks[4], (B, L, N)) * 0.3
+    dsk = jnp.ones((H,))
+    sf = jax.jit(lambda *args: ssd_ref(*args, chunk))
+    us = _time(sf, x, dt, a, bm, cm, dsk)
+    rows.append(f"ssd_scan_ref_B{B}_L{L},{us:.0f},"
+                f"{B * L / us:.2f}_tokens_per_us")
+    return rows
+
+
+def bench_engine() -> List[str]:
+    from repro.configs import get_config
+    from repro.models.model import init_params
+    from repro.serving.engine import Engine
+    from repro.serving.request import Request
+
+    rows = ["engine,us_per_call,derived"]
+    cfg = get_config("smollm-135m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_batch=4, max_len=64)
+    reqs = [Request(prompt_tokens=list(range(2, 10)), max_new_tokens=50)
+            for _ in range(4)]
+    t0 = time.perf_counter()
+    for r in reqs:
+        first, caches = eng.prefill_request(r)
+        eng.insert(r, caches, first)
+    t_pre = (time.perf_counter() - t0) / len(reqs) * 1e6
+    rows.append(f"engine_prefill_insert,{t_pre:.0f},batch1_len8")
+    n = 0
+    t0 = time.perf_counter()
+    while eng.n_active:
+        eng.decode_step()
+        n += 1
+    t_dec = (time.perf_counter() - t0) / max(n, 1) * 1e6
+    rows.append(f"engine_decode_step,{t_dec:.0f},batch4_{n}_iters")
+    return rows

@@ -1,0 +1,197 @@
+"""One benchmark per paper table/figure. Each returns a list of CSV rows
+(first row = header). ``benchmarks.run`` prints all of them.
+
+Absolute numbers differ from the paper (TPU v5e constants vs Ascend 910B;
+DESIGN.md §2) — each benchmark states the paper's claim so the qualitative
+reproduction is auditable side by side.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List
+
+from repro.configs import get_config
+from repro.core.colocation import STAGE_MIX, interference_heatmap
+from repro.core.costmodel import RDMA, V5E, CostModel
+from repro.core.kv_transfer import plan as kv_plan
+from repro.core.simulator import SHAREGPT_4O, VISUALWEB, simulate
+from repro.models.frontend import PAPER_RESOLUTION_TOKENS
+
+MODEL = "openpangu-7b-vl"
+N_REQ = 256
+SLO = (2000.0, 50.0)
+SLO_ENC = (2000.0, 80.0)      # paper: Encode-disaggregation SLO
+
+
+def table2_transmission_ablation() -> List[str]:
+    """Paper Table 2: E-P async prefetch / P-D grouped KV ablation.
+
+    Claim: prefetch cuts TTFT 16.6-21.7%, grouping 11.9-16%, both
+    26.1-31.6%, with TPOT roughly unchanged."""
+    model = get_config(MODEL)
+    rows = ["table2,rate_req_s,variant,ttft_ms,dttft_pct,tpot_ms"]
+    for rate in (2.0, 3.0):
+        base = None
+        for name, kv, ep in [
+                ("baseline(layer_wise+sync)", "layer_wise", False),
+                ("w_EP_async_prefetch", "layer_wise", True),
+                ("w_PD_grouped", "grouped", False),
+                ("EPD-Serve(both)", "grouped", True)]:
+            m = simulate(model, "E-P-D", SHAREGPT_4O, rate=rate,
+                         n_requests=N_REQ, seed=3, kv_scheme=kv, ep_async=ep)
+            if base is None:
+                base = m.mean_ttft_ms
+            rows.append(
+                f"table2,{rate},{name},{m.mean_ttft_ms:.1f},"
+                f"{(m.mean_ttft_ms / base - 1) * 100:+.1f},"
+                f"{m.mean_tpot_ms:.2f}")
+    return rows
+
+
+def table3_ep_prefetch_overlap() -> List[str]:
+    """Paper Table 3: feature transfer vs scheduling latency by image
+    resolution; overlap ~100% below 4K, 99.78% at 4K."""
+    cm = CostModel(get_config(MODEL))
+    rows = ["table3,resolution,tokens,transfer_ms,scheduling_ms,overlap_pct"]
+    for res, n in PAPER_RESOLUTION_TOKENS.items():
+        nb = cm.feature_bytes(n)
+        tx = cm.feature_transfer_time(nb) * 1e3
+        sc = cm.dispatch_latency(nb) * 1e3
+        ov = min(tx, sc) / tx * 100
+        rows.append(f"table3,{res[0]}x{res[1]},{n},{tx:.2f},{sc:.2f},{ov:.2f}")
+    return rows
+
+
+def table4_kv_grouping() -> List[str]:
+    """Paper Table 4 / Fig 7: layer-wise vs hierarchically-grouped KV
+    transmission at seq 1024/2048, concurrency 16.
+
+    Claim: overlap 15-25% -> ~99%; bandwidth +58% (1024) / +10% (2048)."""
+    model = get_config(MODEL)
+    cm = CostModel(model, RDMA)
+    rows = ["table4,seq_len,scheme,kv_ms,exposed_ms,prefill_ms,"
+            "overlap_pct,bandwidth_GBps"]
+    conc = 16
+    for seq in (1024, 2048):
+        prefill = cm.prefill_time(seq) * conc      # batched prefill pass
+        payload = cm.kv_bytes(seq) * conc
+        for scheme in ("layer_wise", "grouped"):
+            p = kv_plan(scheme, n_layers=model.n_layers,
+                        bytes_per_layer=payload / model.n_layers,
+                        per_layer_compute=prefill / model.n_layers,
+                        handshake=RDMA.handshake, link_bw=RDMA.link_bw)
+            rows.append(
+                f"table4,{seq},{scheme},{p.kv_latency * 1e3:.1f},"
+                f"{p.exposed_latency * 1e3:.2f},{p.prefill_end * 1e3:.0f},"
+                f"{p.overlap_ratio * 100:.2f},"
+                f"{p.effective_bandwidth / 1e9:.2f}")
+    return rows
+
+
+def figs8_11_encode_disaggregation() -> List[str]:
+    """Paper Figs 8-11: TP1 / TP2 / E-PD / (E-PD) across request rates.
+
+    Claim: (E-PD) beats TP1 on throughput and SLO; dedicated-chip E-PD
+    wastes the Encode chip; TP2 saturates first (sync overhead).
+    Rates are per-NPU (figure x-axis)."""
+    model = get_config(MODEL)
+    rows = ["figs8_11,dataset,rate_per_npu,deployment,n_chips,slo_pct,"
+            "tput_tok_s_per_chip,ttft_ms,tpot_ms"]
+    for ds_name, ds in (("sharegpt4o", SHAREGPT_4O), ("visualweb", VISUALWEB)):
+        for rate in (2.0, 4.0, 6.0, 8.0):
+            for dep in ("TP1", "TP2", "E-PD", "(E-PD)"):
+                m = simulate(model, dep, ds, rate=rate, n_requests=N_REQ,
+                             seed=5, per_chip_rate=True)
+                rows.append(
+                    f"figs8_11,{ds_name},{rate},{dep},{m.n_chips},"
+                    f"{m.slo_attainment(*SLO_ENC) * 100:.1f},"
+                    f"{m.throughput_tok_s / m.n_chips:.1f},"
+                    f"{m.mean_ttft_ms:.1f},{m.mean_tpot_ms:.2f}")
+    return rows
+
+
+def figs12_15_decode_disaggregation() -> List[str]:
+    """Paper Figs 12-15: EP-D / (E-P)-D / (E-D)-P vs TP1/TP2.
+
+    Claim: decode disaggregation cuts TPOT 80-93%; (E-D)-P best TTFT;
+    (E-P)-D best balanced/SLO."""
+    model = get_config(MODEL)
+    rows = ["figs12_15,rate_per_npu,deployment,n_chips,slo_pct,"
+            "tput_tok_s_per_chip,ttft_ms,tpot_ms"]
+    for rate in (2.0, 3.0, 4.0):
+        for dep in ("TP1", "TP2", "EP-D", "(E-P)-D", "(E-D)-P"):
+            m = simulate(model, dep, SHAREGPT_4O, rate=rate, n_requests=N_REQ,
+                         seed=5, per_chip_rate=True)
+            rows.append(
+                f"figs12_15,{rate},{dep},{m.n_chips},"
+                f"{m.slo_attainment(*SLO) * 100:.1f},"
+                f"{m.throughput_tok_s / m.n_chips:.1f},"
+                f"{m.mean_ttft_ms:.1f},{m.mean_tpot_ms:.2f}")
+    return rows
+
+
+def table5_full_epd() -> List[str]:
+    """Paper Table 5: all deployments at one high total load.
+
+    Claim: only decode-disaggregated deployments meet TPOT<=50ms; E-P-D
+    attains the highest SLO and per-NPU effective throughput (7.95x EP-D)."""
+    model = get_config(MODEL)
+    rows = ["table5,deployment,n_chips,ttft_ms,tpot_ms,slo_pct,"
+            "eff_tput_tok_s_per_chip"]
+    for dep, reps in [("TP1", 2), ("(E-PD)", 2), ("EP-D", 1), ("(E-P)-D", 1),
+                      ("(E-D)-P", 1), ("E-P-D", 1)]:
+        m = simulate(model, dep, SHAREGPT_4O, rate=8.0, n_requests=2 * N_REQ,
+                     seed=9, replicas=reps)
+        name = f"{dep}x{reps}" if reps > 1 else dep
+        rows.append(
+            f"table5,{name},{m.n_chips},{m.mean_ttft_ms:.1f},"
+            f"{m.mean_tpot_ms:.2f},{m.slo_attainment(*SLO) * 100:.2f},"
+            f"{m.effective_throughput(*SLO):.2f}")
+    return rows
+
+
+def fig6_colocation_heatmap() -> List[str]:
+    """Paper Fig 6: stage/operator co-location interference. Claim:
+    similar resource profiles interfere strongly, complementary ones
+    weakly (E|D < E|P < P|P)."""
+    rows = ["fig6,stage,concurrent,slowdown"]
+    for (a, b), v in sorted(interference_heatmap().items()):
+        rows.append(f"fig6,{a},{b},{v:.3f}")
+    rows.append("fig6_mix,stage," + ",".join(
+        f"{op}" for op in ("matmul", "vector", "dma", "collective")))
+    for st, mix in STAGE_MIX.items():
+        rows.append("fig6_mix," + st + "," + ",".join(
+            f"{mix[o]:.2f}" for o in ("matmul", "vector", "dma",
+                                      "collective")))
+    return rows
+
+
+def fig17_slo_regimes() -> List[str]:
+    """Paper Fig 17 / §4.7: per-regime winners. Claim: (E-P)-D for
+    balanced latency, (E-D)-P for TTFT, (E-PD) for raw throughput."""
+    model = get_config(MODEL)
+    deps = ("TP1", "E-PD", "(E-PD)", "EP-D", "(E-P)-D", "(E-D)-P", "E-P-D")
+    rows = ["fig17,rate_per_npu,best_ttft,best_tpot,best_tput_per_chip"]
+    for rate in (4.0, 6.0, 8.0):
+        res = {d: simulate(model, d, SHAREGPT_4O, rate=rate,
+                           n_requests=N_REQ, seed=13, per_chip_rate=True)
+               for d in deps}
+        best_ttft = min(res, key=lambda d: res[d].mean_ttft_ms)
+        best_tpot = min(res, key=lambda d: res[d].mean_tpot_ms)
+        best_tput = max(res,
+                        key=lambda d: res[d].throughput_tok_s / res[d].n_chips)
+        rows.append(f"fig17,{rate},{best_ttft},{best_tpot},{best_tput}")
+    return rows
+
+
+ALL_BENCHMARKS = [
+    table2_transmission_ablation,
+    table3_ep_prefetch_overlap,
+    table4_kv_grouping,
+    figs8_11_encode_disaggregation,
+    figs12_15_decode_disaggregation,
+    table5_full_epd,
+    fig6_colocation_heatmap,
+    fig17_slo_regimes,
+]

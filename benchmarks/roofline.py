@@ -1,0 +1,93 @@
+"""Roofline report: aggregates experiments/dryrun/*.json into the
+EXPERIMENTS.md §Roofline table.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--mesh singlepod]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, SHAPES
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load(arch: str, shape: str, mesh: str, label: str = ""):
+    suffix = f"_{label}" if label else ""
+    f = DRYRUN / f"{arch}_{shape}_{mesh}{suffix}.json"
+    if not f.exists():
+        return None
+    return json.loads(f.read_text())
+
+
+def fmt_row(r) -> str:
+    if r is None:
+        return ""
+    if "skipped" in r:
+        return (f"| {r['arch']} | {r['shape']} | — | — | — | — | skipped |"
+                f" {r['skipped'][:40]}… |")
+    rf = r["roofline"]
+    peak = r["memory"]["peak_bytes"] / 2 ** 30
+    ratio = r["useful_flops_ratio"]
+    return (f"| {r['arch']} | {r['shape']} "
+            f"| {rf['compute_s'] * 1e3:.2f} | {rf['memory_s'] * 1e3:.2f} "
+            f"| {rf['collective_s'] * 1e3:.2f} | {peak:.2f} "
+            f"| **{rf['bottleneck']}** | {ratio:.2f} |")
+
+
+HILLCLIMBS = [
+    # (arch, shape, variant label) — the three §Perf pairs
+    ("glm4-9b", "train_4k", "fsdp"),
+    ("llama4-scout-17b-a16e", "train_4k", "fsdp"),
+    ("llama4-scout-17b-a16e", "train_4k", "fsdp_ep"),
+    ("llava-next-mistral-7b", "decode_32k", "kvfp8"),
+]
+
+
+def compare():
+    """§Perf before/after table from the recorded variant JSONs."""
+    print("| arch | shape | variant | coll ms (base→opt) | "
+          "peak GiB (base→opt) | memory ms (base→opt) |")
+    print("|---|---|---|---|---|---|")
+    for arch, shape, label in HILLCLIMBS:
+        base = load(arch, shape, "singlepod")
+        opt = load(arch, shape, "singlepod", label)
+        if not base or not opt or "skipped" in base:
+            continue
+        bc = base["roofline"]["collective_s"] * 1e3
+        oc = opt["roofline"]["collective_s"] * 1e3
+        bp = base["memory"]["peak_bytes"] / 2 ** 30
+        op = opt["memory"]["peak_bytes"] / 2 ** 30
+        bm = base["roofline"]["memory_s"] * 1e3
+        om = opt["roofline"]["memory_s"] * 1e3
+        print(f"| {arch} | {shape} | {label} "
+              f"| {bc:.0f} → {oc:.0f} ({oc/bc-1:+.0%}) "
+              f"| {bp:.1f} → {op:.1f} ({op/bp-1:+.0%}) "
+              f"| {bm:.2f} → {om:.2f} ({om/bm-1:+.0%}) |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="singlepod")
+    ap.add_argument("--label", default="")
+    ap.add_argument("--compare", action="store_true",
+                    help="print the §Perf baseline-vs-optimized table")
+    args = ap.parse_args()
+
+    if args.compare:
+        compare()
+        return
+    print("| arch | shape | compute ms | memory ms | collective ms "
+          "| peak GiB/dev | bottleneck | MODEL/HLO FLOPs |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in ASSIGNED_ARCHS:
+        for shape in SHAPES:
+            row = fmt_row(load(arch, shape, args.mesh, args.label))
+            if row:
+                print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+# One function per paper table/figure (benchmarks.paper_tables) plus
+# kernel/engine microbenchmarks. Prints CSV rows: name,...,derived.
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    t_start = time.time()
+    from benchmarks.extensions import EXTENSION_BENCHMARKS
+    from benchmarks.kernel_bench import bench_engine, bench_kernels
+    from benchmarks.paper_tables import ALL_BENCHMARKS
+
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for fn in ALL_BENCHMARKS + EXTENSION_BENCHMARKS:
+        if only and only not in fn.__name__:
+            continue
+        t0 = time.time()
+        for row in fn():
+            print(row)
+        print(f"# {fn.__name__} done in {time.time() - t0:.1f}s", flush=True)
+    if only is None or "kernel" in only or "engine" in only:
+        for row in bench_kernels():
+            print(row)
+        for row in bench_engine():
+            print(row)
+    print(f"# total {time.time() - t_start:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""SLO-driven deployment selection (paper §4.7): sweep deployments across
+request rates and report the winner per SLO regime — the paper's radar
+chart as a table.
+
+    PYTHONPATH=src python examples/deployment_planner.py
+"""
+from repro.configs import get_config
+from repro.core.simulator import SHAREGPT_4O, simulate
+
+DEPLOYMENTS = ["TP1", "(E-PD)", "EP-D", "(E-P)-D", "(E-D)-P", "E-P-D"]
+REGIMES = {
+    "high_performance": dict(ttft=2000, tpot=50),    # strict both
+    "fast_first_token": dict(ttft=800, tpot=80),     # TTFT-dominant
+    "max_throughput": dict(ttft=8000, tpot=200),     # loose latency
+}
+
+
+def main():
+    model = get_config("openpangu-7b-vl")
+    for rate in (4.0, 8.0, 12.0):
+        res = {d: simulate(model, d, SHAREGPT_4O, rate=rate,
+                           n_requests=192, seed=21) for d in DEPLOYMENTS}
+        print(f"\n== rate {rate} req/s ==")
+        for regime, slo in REGIMES.items():
+            best = max(DEPLOYMENTS, key=lambda d: (
+                res[d].effective_throughput(slo["ttft"], slo["tpot"])))
+            m = res[best]
+            print(f"{regime:18s} -> {best:8s} "
+                  f"(eff {m.effective_throughput(slo['ttft'], slo['tpot']):.0f}"
+                  f" tok/s/chip, TTFT {m.mean_ttft_ms:.0f}ms, "
+                  f"TPOT {m.mean_tpot_ms:.1f}ms)")
+
+
+if __name__ == "__main__":
+    main()

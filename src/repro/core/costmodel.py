@@ -1,0 +1,171 @@
+"""Roofline-derived stage cost model.
+
+Maps (model config, stage, request shape, instance resources) to service
+times, using the same three-term decomposition as the dry-run roofline
+(EXPERIMENTS.md §Roofline): compute = FLOPs / (chips * peak), memory =
+bytes / (chips * HBM bw), collective = bytes / link bw. A stage's service
+time is max(compute, memory) + collective + fixed launch overhead.
+
+Hardware constants are the TPU v5e target (the paper's Ascend Atlas 800I
+A2 is comparable per-chip; DESIGN.md records the swap). Efficiencies are
+de-rates from peak, the usual 0.4-0.6 MFU band for prefill-like work.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class Hardware:
+    peak_flops: float = 197e12        # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9             # B/s per chip
+    link_bw: float = 50e9             # B/s per ICI link (paper: RDMA/HCCS)
+    # E->P features go through the MM Store (DRAM staging + network, the
+    # Mooncake path): effective bandwidth back-computed from the paper's
+    # Table 3 measurements (0.72 MB in 8.1 ms ... 116 MB in 730 ms).
+    store_bw: float = 0.16e9
+    mfu: float = 0.5                  # achievable fraction of peak, compute
+    mbu: float = 0.7                  # achievable fraction of HBM bw
+    tp_allreduce_lat: float = 8e-6    # per-collective latency, seconds
+    tp_efficiency: float = 0.7        # per-doubling compute scaling under TP
+    launch_overhead: float = 2e-4     # per-step host/launch overhead
+    handshake: float = 2e-3           # KV-transfer metadata handshake (paper §3.3)
+    # cross-instance dispatch overhead (scheduler tick, batch formation,
+    # local cache write) — the "scheduling latency" of the paper's Table 3:
+    # ~30 ms base plus a store-bandwidth write of the feature.
+    dispatch_base: float = 30e-3
+    dtype_bytes: int = 2
+
+
+V5E = Hardware()
+# cross-node disaggregation profile: KV moves over RDMA/DCN instead of ICI
+RDMA = Hardware(link_bw=12.5e9, handshake=13e-3)
+
+
+# ViT encoder proxy for the Encode stage (paper: 0.6-6B ViT params).
+@dataclass(frozen=True)
+class EncoderModel:
+    params: float = 0.7e9             # openPangu-7B-VL ViT
+    d_model: int = 1280
+    n_layers: int = 32
+    # ViT runs on pre-merge patches (2x2 pixel-unshuffle before the
+    # projector is standard in Qwen2-VL-style stacks) — internal sequence
+    # is ~4x the emitted vision tokens. This is what makes Encode rival
+    # Prefill in latency (paper Fig. 2).
+    internal_multiplier: int = 4
+
+
+@dataclass(frozen=True)
+class CostModel:
+    cfg: ModelConfig
+    hw: Hardware = V5E
+    vit: EncoderModel = EncoderModel()
+
+    # ---- stage compute ------------------------------------------------------
+    def _chip_rate(self, chips: int, tp: int) -> float:
+        """Aggregate compute rate: TP scales sub-linearly (sync overhead)."""
+        eff = self.hw.tp_efficiency ** max(0, (tp - 1).bit_length()) \
+            if tp > 1 else 1.0
+        return chips * self.hw.peak_flops * self.hw.mfu * eff
+
+    def encode_time(self, n_tokens: int, chips: int = 1, tp: int = 1) -> float:
+        """ViT forward over n visual tokens (compute-bound)."""
+        n_int = n_tokens * self.vit.internal_multiplier
+        flops = 2.0 * self.vit.params * n_int
+        # quadratic attention term
+        flops += 4.0 * self.vit.n_layers * n_int ** 2 * self.vit.d_model
+        t = flops / self._chip_rate(chips, tp)
+        return t + self.hw.launch_overhead + self._tp_penalty(tp, self.vit.n_layers)
+
+    def prefill_time(self, prompt_len: int, chips: int = 1, tp: int = 1) -> float:
+        cfg = self.cfg
+        n_active = cfg.active_param_count()
+        flops = 2.0 * n_active * prompt_len
+        attn_layers = len(cfg.attn_layers) or 0
+        if attn_layers:
+            eff_ctx = prompt_len if cfg.sliding_window is None else min(
+                prompt_len, cfg.sliding_window)
+            flops += 4.0 * attn_layers * prompt_len * eff_ctx * cfg.q_dim
+        t_c = flops / self._chip_rate(chips, tp)
+        t_m = self.param_bytes() / (chips * self.hw.hbm_bw * self.hw.mbu)
+        t = max(t_c, t_m)
+        return t + self.hw.launch_overhead + self._tp_penalty(tp, cfg.n_layers)
+
+    def decode_step_time(self, batch: int, kv_len: float, chips: int = 1,
+                         tp: int = 1) -> float:
+        """One decode iteration for a batch (memory-bound)."""
+        cfg = self.cfg
+        bytes_moved = self.param_bytes() + batch * self.kv_bytes_per_token() \
+            * self._eff_kv(kv_len)
+        t_m = bytes_moved / (chips * self.hw.hbm_bw * self.hw.mbu)
+        flops = 2.0 * cfg.active_param_count() * batch
+        t_c = flops / self._chip_rate(chips, tp)
+        t = max(t_m, t_c)
+        return t + self.hw.launch_overhead + self._tp_penalty(tp, cfg.n_layers)
+
+    def _tp_penalty(self, tp: int, n_layers: int) -> float:
+        """Inter-chip sync overhead of tensor parallelism (2 allreduce/layer).
+
+        This is what makes TP2 the worst deployment in the paper (§4.3)."""
+        if tp <= 1:
+            return 0.0
+        return 2.0 * n_layers * self.hw.tp_allreduce_lat * (tp - 1)
+
+    def _eff_kv(self, kv_len: float) -> float:
+        w = self.cfg.sliding_window
+        return min(kv_len, w) if w else kv_len
+
+    # ---- payload sizes ------------------------------------------------------
+    def param_bytes(self) -> float:
+        return self.cfg.active_param_count() * self.hw.dtype_bytes
+
+    def kv_bytes_per_token(self) -> float:
+        """P->D payload per token: attention KV (+ amortized SSM state)."""
+        cfg = self.cfg
+        b = len(cfg.attn_layers) * 2 * cfg.kv_dim * self.hw.dtype_bytes
+        return b
+
+    def ssm_state_bytes(self) -> float:
+        cfg = self.cfg
+        if cfg.ssm is None:
+            return 0.0
+        nh = cfg.ssm.n_heads(cfg.d_model)
+        per_layer = nh * cfg.ssm.head_dim * cfg.ssm.state_dim * 4  # f32
+        return len(cfg.ssm_layers) * per_layer
+
+    def kv_bytes(self, prompt_len: int) -> float:
+        """Total P->D payload for one request."""
+        return (self.kv_bytes_per_token() * self._eff_kv(prompt_len)
+                + self.ssm_state_bytes())
+
+    def feature_bytes(self, n_tokens: int) -> float:
+        """E->P payload (projected features, d_model wide — Table 3)."""
+        return n_tokens * self.cfg.d_model * self.hw.dtype_bytes
+
+    # ---- transfers ----------------------------------------------------------
+    def transfer_time(self, nbytes: float, with_handshake: bool = True) -> float:
+        t = nbytes / self.hw.link_bw
+        return t + (self.hw.handshake if with_handshake else 0.0)
+
+    def feature_transfer_time(self, nbytes: float) -> float:
+        """E->P feature movement through the MM Store path."""
+        return nbytes / self.hw.store_bw
+
+    def dispatch_latency(self, nbytes: float) -> float:
+        """Cross-instance scheduling latency (paper Table 3): scheduler
+        tick + batch formation + local cache write of the feature. The
+        write path is marginally faster than the store fetch (~5%), so for
+        very large features (4K images) the transfer outruns scheduling
+        and overlap dips below 100% — exactly the paper's Table 3 shape."""
+        return self.hw.dispatch_base + nbytes / (self.hw.store_bw * 1.05)
+
+    def per_layer_kv_bytes(self, prompt_len: int) -> float:
+        cfg = self.cfg
+        n_attn = max(len(cfg.attn_layers), 1)
+        return self.kv_bytes(prompt_len) / n_attn
+
+    def per_layer_prefill_time(self, prompt_len: int, chips: int = 1,
+                               tp: int = 1) -> float:
+        return self.prefill_time(prompt_len, chips, tp) / self.cfg.n_layers

@@ -1,0 +1,91 @@
+"""MM Store — the shared multimodal feature cache pool (paper §3.2).
+
+Content-hash keyed: key = hash(multimodal input), value = encoded feature
+tensor (or, in simulation, its metadata). Supports cross-request reuse
+(dedup), LRU eviction under a byte budget, and fault injection so the
+fault-tolerant recomputation path is testable.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+
+@dataclass
+class StoreStats:
+    puts: int = 0
+    hits: int = 0
+    misses: int = 0
+    dedup_puts: int = 0          # put of an already-present key
+    evictions: int = 0
+    faults_injected: int = 0
+    bytes_stored: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class MMStore:
+    """Hash-keyed feature pool with LRU eviction."""
+
+    def __init__(self, capacity_bytes: Optional[int] = None):
+        self.capacity = capacity_bytes
+        self._data: "collections.OrderedDict[str, Tuple[Any, int]]" = \
+            collections.OrderedDict()
+        self.stats = StoreStats()
+        self._fail_keys: set = set()
+
+    # -- core API -------------------------------------------------------------
+    def put(self, key: str, value: Any, nbytes: int) -> None:
+        if key in self._data:
+            self.stats.dedup_puts += 1
+            self._data.move_to_end(key)
+            return
+        self.stats.puts += 1
+        self._data[key] = (value, nbytes)
+        self.stats.bytes_stored += nbytes
+        self._evict()
+
+    def get(self, key: str, record: bool = True) -> Optional[Any]:
+        """record=False: internal fetch (e.g. the P-side prefetcher pulling
+        a feature the E stage just produced) — served but not counted in
+        the hit/miss statistics, which track cross-request dedup."""
+        if key in self._fail_keys:
+            # injected fault: behaves like a lost entry (paper §3.2 FT path)
+            self._fail_keys.discard(key)
+            self.stats.faults_injected += 1
+            if record:
+                self.stats.misses += 1
+            return None
+        if key in self._data:
+            if record:
+                self.stats.hits += 1
+            self._data.move_to_end(key)
+            return self._data[key][0]
+        if record:
+            self.stats.misses += 1
+        return None
+
+    def contains(self, key: str) -> bool:
+        return key in self._data
+
+    def nbytes(self, key: str) -> int:
+        return self._data[key][1] if key in self._data else 0
+
+    def _evict(self) -> None:
+        if self.capacity is None:
+            return
+        while self.stats.bytes_stored > self.capacity and len(self._data) > 1:
+            _, (_, nb) = self._data.popitem(last=False)
+            self.stats.bytes_stored -= nb
+            self.stats.evictions += 1
+
+    # -- fault injection --------------------------------------------------------
+    def inject_fault(self, key: str) -> None:
+        self._fail_keys.add(key)
+
+    def __len__(self) -> int:
+        return len(self._data)

@@ -1,0 +1,80 @@
+"""Modality-aware multi-path scheduling + instance-level load balancing
+(paper §3.4).
+
+The Router keeps a global instance status table (queue length, pending
+work, busy-until estimates) updated by the simulator / engines, routes
+multimodal requests down the E->P->D path and text-only requests down the
+P->D path, and dispatches each stage task to the least-loaded instance
+serving that stage.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.deployment import Deployment, InstanceSpec
+from repro.serving.request import Request
+
+
+@dataclass
+class InstanceStatus:
+    spec: InstanceSpec
+    queue_len: int = 0             # tasks waiting (all stages)
+    active_decode: int = 0         # requests in the decode batch
+    pending_tokens: float = 0.0    # queued prompt tokens (work estimate)
+    busy_until: float = 0.0        # latest known completion estimate
+
+    def load(self, now: float) -> float:
+        """Scalar load metric for least-loaded-first dispatch."""
+        backlog = max(0.0, self.busy_until - now)
+        return (backlog + 1e-3 * self.pending_tokens
+                + 0.01 * self.queue_len + 0.002 * self.active_decode)
+
+
+class Router:
+    def __init__(self, deployment: Deployment):
+        self.deployment = deployment
+        self.status: Dict[str, InstanceStatus] = {
+            i.name: InstanceStatus(i) for i in deployment.instances}
+
+    # -- multi-path routing ----------------------------------------------------
+    def path(self, req: Request) -> List[str]:
+        """Stage path for a request: E->P->D for multimodal, P->D for text."""
+        return ["E", "P", "D"] if req.is_multimodal else ["P", "D"]
+
+    def pick(self, stage: str, now: float,
+             prefer: Optional[str] = None) -> InstanceStatus:
+        """Least-loaded instance serving `stage`. ``prefer`` pins affinity
+        (e.g. keep P and D on the same instance when it serves both)."""
+        cands = [self.status[i.name]
+                 for i in self.deployment.stage_instances(stage)]
+        if not cands:
+            raise ValueError(
+                f"deployment {self.deployment.name} has no {stage} instance")
+        if prefer is not None:
+            for c in cands:
+                if c.spec.name == prefer:
+                    return c
+        return min(cands, key=lambda c: c.load(now))
+
+    # -- status updates (called by the execution layer) --------------------------
+    def on_enqueue(self, name: str, tokens: float = 0.0) -> None:
+        st = self.status[name]
+        st.queue_len += 1
+        st.pending_tokens += tokens
+
+    def on_start(self, name: str, tokens: float = 0.0) -> None:
+        st = self.status[name]
+        st.queue_len = max(0, st.queue_len - 1)
+        st.pending_tokens = max(0.0, st.pending_tokens - tokens)
+
+    def on_busy_until(self, name: str, t: float) -> None:
+        st = self.status[name]
+        st.busy_until = max(st.busy_until, t)
+
+    def on_decode_join(self, name: str) -> None:
+        self.status[name].active_decode += 1
+
+    def on_decode_leave(self, name: str) -> None:
+        st = self.status[name]
+        st.active_decode = max(0, st.active_decode - 1)

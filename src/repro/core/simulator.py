@@ -1,0 +1,389 @@
+"""End-to-end EPD-Serve simulator.
+
+Executes a request trace against a deployment topology on the
+discrete-event engine, with:
+
+* modality-aware multi-path routing + least-loaded dispatch (scheduler),
+* MM Store dedup + E->P async feature prefetching (ep_prefetch),
+* P->D hierarchical grouped KV transmission (kv_transfer),
+* physical co-location with operator-level interference (colocation),
+* stage service times from the roofline cost model (costmodel).
+
+Instance execution semantics:
+* every instance runs ONE task at a time (its own serial stream);
+* monolithic instances (TP1/TP2, 'PD', 'EP') put Encode/Prefill tasks and
+  decode iterations in one queue — E/P tasks take priority, which is the
+  vLLM-style behaviour that starves Decode under load (paper §1);
+* co-located instances (same ``coloc_group``) run concurrently but pay
+  the interference slowdown for whatever their chip-mates execute;
+* Decode runs as back-to-back batched iterations, one token per request
+  per iteration (continuous batching).
+
+This is the scale model used for the paper's Tables 2/5 and Figs 8-17;
+the REAL-compute path (actual JAX engines wired through the same MM
+Store / scheduler / transfer planner) lives in repro.core.cluster.
+"""
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core import colocation
+from repro.core.costmodel import CostModel, Hardware, V5E
+from repro.core.deployment import Deployment, parse
+from repro.core.ep_prefetch import EPPrefetcher
+from repro.core.events import EventLoop
+from repro.core.kv_transfer import plan as kv_plan
+from repro.core.mm_store import MMStore
+from repro.core.scheduler import Router
+from repro.models.frontend import encode_tokens_for_image
+from repro.serving.request import Request
+
+
+# ---------------------------------------------------------------------------
+# Workload
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DatasetSpec:
+    name: str
+    mm_fraction: float
+    resolution: Tuple[int, int]
+    text_tokens_mean: float
+    output_tokens: int = 64
+    unique_images: int = 0        # 0 => every image unique (no dedup hits)
+
+
+# paper §4.1
+SHAREGPT_4O = DatasetSpec("ShareGPT-4o", 1.0, (802, 652), 9.6)
+VISUALWEB = DatasetSpec("VisualWebInstruct", 0.5, (1280, 720), 63.1)
+
+
+def gen_requests(spec: DatasetSpec, n: int, rate: float,
+                 seed: int = 0) -> List[Request]:
+    """Poisson arrivals at `rate` req/s; modality mix per the dataset."""
+    rng = random.Random(seed)
+    reqs = []
+    t = 0.0
+    mm_tokens = encode_tokens_for_image(spec.resolution)
+    for i in range(n):
+        t += rng.expovariate(rate)
+        is_mm = rng.random() < spec.mm_fraction
+        text_len = max(1, int(rng.gauss(spec.text_tokens_mean,
+                                        spec.text_tokens_mean * 0.3)))
+        payload = None
+        ntok = 0
+        if is_mm:
+            img_id = (rng.randrange(spec.unique_images)
+                      if spec.unique_images else i)
+            payload = f"{spec.name}-img-{img_id}".encode()
+            ntok = mm_tokens
+        reqs.append(Request(
+            prompt_tokens=list(range(text_len)),
+            max_new_tokens=spec.output_tokens,
+            mm_payload=payload, mm_tokens=ntok, t_arrival=t))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# Simulator
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SimConfig:
+    deployment: str = "E-P-D"
+    kv_scheme: str = "grouped"          # one_shot | layer_wise | grouped
+    ep_async: bool = True
+    decode_batch_max: int = 512
+    replicas: int = 1
+    hw: Hardware = V5E
+
+
+@dataclass
+class SimMetrics:
+    deployment: str
+    n_chips: int
+    requests: List[Request]
+    makespan: float
+    mean_ttft_ms: float
+    p99_ttft_ms: float
+    mean_tpot_ms: float
+    p99_tpot_ms: float
+    throughput_tok_s: float            # all output tokens / makespan
+    store_hit_rate: float
+    ep_overlap_ratio: float
+
+    def slo_attainment(self, ttft_ms: float, tpot_ms: float) -> float:
+        ok = sum(r.meets_slo(ttft_ms, tpot_ms) for r in self.requests)
+        return ok / len(self.requests)
+
+    def stage_breakdown_ms(self) -> Dict[str, float]:
+        """Mean per-stage latency decomposition (production observability:
+        shows WHERE the TTFT goes per deployment — queueing vs encode vs
+        E->P dispatch vs prefill)."""
+        agg: Dict[str, float] = {}
+        for r in self.requests:
+            for k, v in r.stage_breakdown().items():
+                agg[k] = agg.get(k, 0.0) + v * 1e3
+        return {k: v / len(self.requests) for k, v in agg.items()}
+
+    def effective_throughput(self, ttft_ms: float, tpot_ms: float,
+                             per_chip: bool = True) -> float:
+        toks = sum(len(r.output_tokens) for r in self.requests
+                   if r.meets_slo(ttft_ms, tpot_ms))
+        t = toks / self.makespan if self.makespan > 0 else 0.0
+        return t / self.n_chips if per_chip else t
+
+
+class _Instance:
+    def __init__(self, sim: "Simulator", spec):
+        self.sim = sim
+        self.spec = spec
+        self.queue: List[Tuple[str, Request]] = []    # E / P tasks
+        self.decode_batch: Dict[int, Tuple[Request, int]] = {}
+        self.decode_wait: List[Request] = []
+        self.busy = False
+        self.running_stage: Optional[str] = None
+
+    # ---- task intake ----
+    def enqueue(self, stage: str, req: Request) -> None:
+        self.queue.append((stage, req))
+        self.sim.router.on_enqueue(self.spec.name, req.total_prompt_len)
+        self._kick()
+
+    def join_decode(self, req: Request) -> None:
+        if len(self.decode_batch) >= self.sim.cfg.decode_batch_max:
+            self.decode_wait.append(req)
+            return
+        self.decode_batch[req.request_id] = (req, req.max_new_tokens - 1)
+        self.sim.router.on_decode_join(self.spec.name)
+        self._kick()
+
+    # ---- execution loop ----
+    def _kick(self) -> None:
+        if not self.busy:
+            self._next()
+
+    def _interference(self, stage: str) -> float:
+        if self.spec.coloc_group < 0:
+            return 1.0
+        peers = [i for i in self.sim.instances.values()
+                 if i.spec.coloc_group == self.spec.coloc_group
+                 and i is not self and i.busy and i.running_stage]
+        if not peers:
+            return 1.0
+        return colocation.stage_slowdown(stage, [p.running_stage for p in peers])
+
+    def _next(self) -> None:
+        sim = self.sim
+        loop = sim.loop
+        if self.queue:
+            stage, req = self.queue.pop(0)
+            sim.router.on_start(self.spec.name, req.total_prompt_len)
+            self.busy, self.running_stage = True, stage
+            if stage == "E":
+                dur = sim.cost.encode_time(req.mm_tokens, self.spec.chips,
+                                           self.spec.tp)
+                dur *= self._interference("E")
+                req.t_encode_start = loop.now
+                loop.after(dur, lambda: self._finish_encode(req))
+            else:
+                dur = sim.cost.prefill_time(req.total_prompt_len,
+                                            self.spec.chips, self.spec.tp)
+                dur *= self._interference("P")
+                req.t_prefill_start = loop.now
+                self._start_prefill(req, dur)
+            sim.router.on_busy_until(self.spec.name, loop.now + dur)
+        elif self.decode_batch:
+            self.busy, self.running_stage = True, "D"
+            batch = len(self.decode_batch)
+            kv = sum(r.total_prompt_len + len(r.output_tokens)
+                     for r, _ in self.decode_batch.values()) / batch
+            dur = sim.cost.decode_step_time(batch, kv, self.spec.chips,
+                                            self.spec.tp)
+            dur *= self._interference("D")
+            loop.after(dur, self._finish_decode_iter)
+            sim.router.on_busy_until(self.spec.name, loop.now + dur)
+        else:
+            self.busy, self.running_stage = False, None
+
+    # ---- stage completions ----
+    def _finish_encode(self, req: Request) -> None:
+        sim = self.sim
+        req.t_encode_done = sim.loop.now
+        e_block = sim.finish_encode(self, req)
+        if e_block > 0:
+            sim.loop.after(e_block, self._next)   # sync push blocks E
+        else:
+            self._next()
+
+    def _start_prefill(self, req: Request, base_dur: float) -> None:
+        sim = self.sim
+        d_inst = sim.pick_decode_instance(req, prefer=self.spec.name)
+        if d_inst is self:
+            # fused PD: no transfer
+            sim.loop.after(base_dur, lambda: self._finish_prefill(
+                req, d_inst, join_delay=0.0))
+            return
+        p = kv_plan(sim.cfg.kv_scheme,
+                    n_layers=sim.model.n_layers,
+                    bytes_per_layer=sim.cost.kv_bytes(req.total_prompt_len)
+                    / sim.model.n_layers,
+                    per_layer_compute=base_dur / sim.model.n_layers,
+                    handshake=sim.cfg.hw.handshake,
+                    link_bw=sim.cfg.hw.link_bw)
+        sim.kv_plans.append(p)
+        # layer-wise blocking handshakes stretch prefill itself
+        sim.loop.after(p.prefill_end, lambda: self._finish_prefill(
+            req, d_inst, join_delay=max(0.0, p.total_done - p.prefill_end)))
+
+    def _finish_prefill(self, req: Request, d_inst: "_Instance",
+                        join_delay: float) -> None:
+        sim = self.sim
+        req.t_first_token = sim.loop.now
+        req.output_tokens.append(0)          # O1 produced by Prefill
+        if req.max_new_tokens <= 1:
+            req.t_done = sim.loop.now
+            sim.done.append(req)
+        else:
+            sim.loop.after(join_delay, lambda: d_inst.join_decode(req))
+        self._next()
+
+    def _finish_decode_iter(self) -> None:
+        sim = self.sim
+        finished = []
+        for rid, (req, remaining) in list(self.decode_batch.items()):
+            req.output_tokens.append(0)
+            remaining -= 1
+            if remaining <= 0:
+                req.t_done = sim.loop.now
+                finished.append(rid)
+                sim.done.append(req)
+            else:
+                self.decode_batch[rid] = (req, remaining)
+        for rid in finished:
+            del self.decode_batch[rid]
+            sim.router.on_decode_leave(self.spec.name)
+        while (self.decode_wait and
+               len(self.decode_batch) < sim.cfg.decode_batch_max):
+            self.join_decode(self.decode_wait.pop(0))
+        self._next()
+
+
+class Simulator:
+    def __init__(self, model: ModelConfig, cfg: SimConfig):
+        from repro.core.deployment import scale
+        self.model = model
+        self.cfg = cfg
+        dep = parse(cfg.deployment) if isinstance(cfg.deployment, str) \
+            else cfg.deployment
+        self.deployment = scale(dep, cfg.replicas)
+        self.cost = CostModel(model, cfg.hw)
+        self.loop = EventLoop()
+        self.router = Router(self.deployment)
+        self.store = MMStore()
+        self.prefetcher = EPPrefetcher(self.loop, self.store, self.cost,
+                                       async_mode=cfg.ep_async)
+        self.instances = {s.name: _Instance(self, s)
+                          for s in self.deployment.instances}
+        self.done: List[Request] = []
+        self.kv_plans: list = []
+
+    # ---- routing hooks ----
+    def pick_decode_instance(self, req: Request, prefer: str) -> _Instance:
+        st = self.router.pick("D", self.loop.now, prefer=prefer)
+        return self.instances[st.spec.name]
+
+    def submit(self, req: Request) -> None:
+        self.loop.at(req.t_arrival, lambda: self._arrive(req))
+
+    def _arrive(self, req: Request) -> None:
+        if req.is_multimodal:
+            import hashlib
+            key = hashlib.sha256(req.mm_payload).hexdigest()
+            if self.store.get(key) is not None:   # counts hit/miss stats
+                # cross-request reuse: skip Encode entirely (MM Store hit)
+                req.t_encode_start = req.t_encode_done = self.loop.now
+                self._to_prefill(req, key)
+                return
+            st = self.router.pick("E", self.loop.now)
+            self.instances[st.spec.name].enqueue("E", req)
+        else:
+            st = self.router.pick("P", self.loop.now)
+            self.instances[st.spec.name].enqueue("P", req)
+
+    def finish_encode(self, inst: _Instance, req: Request) -> float:
+        import hashlib
+        key = hashlib.sha256(req.mm_payload).hexdigest()
+        self.store.put(key, {"tokens": req.mm_tokens},
+                       int(self.cost.feature_bytes(req.mm_tokens)))
+        return self._to_prefill(req, key, from_instance=inst)
+
+    def _to_prefill(self, req: Request, key: str,
+                    from_instance: Optional[_Instance] = None) -> float:
+        st = self.router.pick("P", self.loop.now,
+                              prefer=(from_instance.spec.name
+                                      if from_instance is not None and
+                                      from_instance.spec.serves("P") else None))
+        inst = self.instances[st.spec.name]
+        if from_instance is inst:
+            inst.enqueue("P", req)           # same instance: no transfer
+            return 0.0
+        sched_hint = max(0.0, st.busy_until - self.loop.now) \
+            + 0.001 * st.pending_tokens
+        return self.prefetcher.notify(
+            req.request_id, key, req.mm_tokens,
+            on_ready=lambda _rec: inst.enqueue("P", req),
+            scheduling_latency_hint=sched_hint)
+
+    # ---- run ----
+    def run(self, requests: List[Request]) -> SimMetrics:
+        for r in requests:
+            self.submit(r)
+        self.loop.run()
+        assert len(self.done) == len(requests), \
+            f"stuck: {len(self.done)}/{len(requests)} finished"
+        ttfts = sorted(r.ttft * 1e3 for r in self.done)
+        tpots = sorted(r.tpot * 1e3 for r in self.done)
+        makespan = max(r.t_done for r in self.done) - min(
+            r.t_arrival for r in self.done)
+        toks = sum(len(r.output_tokens) for r in self.done)
+        q = lambda xs, p: xs[min(len(xs) - 1, int(p * len(xs)))]
+        return SimMetrics(
+            deployment=self.deployment.name,
+            n_chips=self.deployment.n_chips,
+            requests=list(self.done),
+            makespan=makespan,
+            mean_ttft_ms=sum(ttfts) / len(ttfts),
+            p99_ttft_ms=q(ttfts, 0.99),
+            mean_tpot_ms=sum(tpots) / len(tpots),
+            p99_tpot_ms=q(tpots, 0.99),
+            throughput_tok_s=toks / makespan if makespan > 0 else 0.0,
+            store_hit_rate=self.store.stats.hit_rate,
+            ep_overlap_ratio=self.prefetcher.mean_overlap_ratio,
+        )
+
+
+def simulate(model: ModelConfig, deployment: str, dataset: DatasetSpec,
+             *, rate: float, n_requests: int = 512, seed: int = 0,
+             kv_scheme: str = "grouped", ep_async: bool = True,
+             replicas: int = 1, hw: Hardware = V5E,
+             per_chip_rate: bool = False) -> SimMetrics:
+    """Run one deployment against a trace injected at ``rate`` req/s.
+
+    per_chip_rate=True multiplies the rate by the deployment's chip count
+    — the paper's figures 8-17 report a per-NPU x-axis so bigger
+    deployments absorb proportionally more traffic; Table 5 compares
+    deployments at one TOTAL rate (its effective-throughput arithmetic
+    only closes under that reading).
+    """
+    cfg = SimConfig(deployment=deployment, kv_scheme=kv_scheme,
+                    ep_async=ep_async, replicas=replicas, hw=hw)
+    sim = Simulator(model, cfg)
+    if per_chip_rate:
+        rate = rate * sim.deployment.n_chips
+    reqs = gen_requests(dataset, n_requests, rate, seed)
+    return sim.run(reqs)

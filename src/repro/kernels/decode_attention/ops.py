@@ -1,0 +1,23 @@
+"""Jit'd public wrapper for the decode-attention kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels import dispatch
+from repro.kernels.decode_attention.kernel import decode_attention as _kernel
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_k", "interpret"))
+def decode_attention(q, k, v, q_pos, kv_pos, *, window: Optional[int] = None,
+                     block_k: int = 512, interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = dispatch.interpret()
+    return _kernel(q, k, v, q_pos, kv_pos, window=window, block_k=block_k,
+                   interpret=interpret)
+
+
+__all__ = ["decode_attention", "decode_attention_ref"]

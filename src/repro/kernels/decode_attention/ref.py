@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the decode-attention kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, q_pos, kv_pos,
+                         *, window: Optional[int] = None) -> jax.Array:
+    """Single-token GQA attention over a (ring-buffer) KV cache.
+
+    q: (b, nq, hd) — the one new token's queries.
+    k, v: (b, S, nkv, hd); kv_pos: (b, S) absolute positions, -1 = empty.
+    q_pos: (b,) the token's absolute position.
+    Returns (b, nq, hd).
+    """
+    b, nq, hd = q.shape
+    nkv = k.shape[2]
+    g = nq // nkv
+    qg = q.reshape(b, nkv, g, hd)
+    scores = jnp.einsum("bkgh,bTkh->bkgT", qg, k,
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+    valid = (kv_pos >= 0) & (kv_pos <= q_pos[:, None])
+    if window is not None:
+        valid &= kv_pos > (q_pos[:, None] - window)
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgT,bTkh->bkgh", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, nq, hd).astype(q.dtype)

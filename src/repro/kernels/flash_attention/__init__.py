@@ -1,0 +1,3 @@
+from repro.kernels.flash_attention.ops import attention_ref, flash_attention
+
+__all__ = ["flash_attention", "attention_ref"]

@@ -1,0 +1,25 @@
+"""Jit'd public wrapper for the flash-attention kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels import dispatch
+from repro.kernels.flash_attention.kernel import flash_attention as _kernel
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("window", "causal", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, q_pos, kv_pos, *, window: Optional[int] = None,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 512, interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = dispatch.interpret()
+    return _kernel(q, k, v, q_pos, kv_pos, window=window, causal=causal,
+                   block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+__all__ = ["flash_attention", "attention_ref"]

@@ -1,0 +1,70 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA, causal/window)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _attention_dense(q, k, v, q_pos, kv_pos, window, causal):
+    b, s, nq, hd = q.shape
+    S, nkv = k.shape[1], k.shape[2]
+    g = nq // nkv
+    qg = q.reshape(b, s, nkv, g, hd)
+    scores = jnp.einsum("bskgh,bTkh->bkgsT", qg, k,
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+    valid = (kv_pos[:, None, :] >= 0) & (q_pos[:, :, None] >= 0)
+    if causal:
+        valid &= kv_pos[:, None, :] <= q_pos[:, :, None]
+        if window is not None:
+            valid &= kv_pos[:, None, :] > q_pos[:, :, None] - window
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # fully-masked rows (padding queries) produce uniform probs; zero them
+    any_valid = jnp.any(valid, axis=-1)[:, None, None, :, None]
+    probs = jnp.where(any_valid, probs, 0.0)
+    out = jnp.einsum("bkgsT,bTkh->bskgh", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, s, nq, hd).astype(q.dtype)
+
+
+# above this many query positions, scan over query chunks so the (s, S)
+# score tensor never materializes in full (the jnp analogue of the flash
+# kernel's tiling; keeps long-seq dry-runs within per-chip HBM). Each
+# chunk is remat'ed: the backward pass recomputes one chunk's scores at a
+# time instead of keeping every chunk's softmax residuals alive.
+_CHUNK_THRESHOLD = 2048
+_Q_CHUNK = 1024
+
+
+def attention_ref(q, k, v, q_pos, kv_pos, *, window: Optional[int] = None,
+                  causal: bool = True) -> jax.Array:
+    """q: (b, s, nq, hd); k, v: (b, S, nkv, hd); q_pos: (b, s); kv_pos: (b, S).
+
+    Positions < 0 mark padding / empty cache slots. GQA: nq = g * nkv.
+    Returns (b, s, nq, hd) in q.dtype.
+    """
+    b, s, nq, hd = q.shape
+    if s <= _CHUNK_THRESHOLD:
+        return _attention_dense(q, k, v, q_pos, kv_pos, window, causal)
+
+    c = _Q_CHUNK
+    pad = (-s) % c
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=-1)
+    nc = q.shape[1] // c
+    qc = jnp.moveaxis(q.reshape(b, nc, c, nq, hd), 1, 0)
+    pc = jnp.moveaxis(q_pos.reshape(b, nc, c), 1, 0)
+
+    @jax.checkpoint
+    def one(args):
+        qi, pi = args
+        return _attention_dense(qi, k, v, pi, kv_pos, window, causal)
+
+    out = jax.lax.map(one, (qc, pc))                 # (nc, b, c, nq, hd)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, nc * c, nq, hd)
+    return out[:, :s]

@@ -1,0 +1,41 @@
+"""Unified kernel dispatch used by the model layers.
+
+``attention`` / ``ssd`` route to the Pallas kernels when enabled
+(``REPRO_USE_PALLAS=1`` or running on real TPU) and to the pure-jnp
+references otherwise. The references are also the dry-run/roofline path:
+XLA's cost_analysis sees the full math instead of an opaque custom call.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels import dispatch
+
+
+def attention(q, k, v, q_pos, kv_pos, *, window: Optional[int] = None,
+              causal: bool = True) -> jax.Array:
+    """q: (b, s, nq, hd); k, v: (b, S, nkv, hd). See flash_attention/ref.py."""
+    if dispatch.use_pallas():
+        if q.shape[1] == 1 and causal:
+            from repro.kernels.decode_attention.kernel import decode_attention
+            out = decode_attention(q[:, 0], k, v, q_pos[:, 0], kv_pos,
+                                   window=window,
+                                   interpret=dispatch.interpret())
+            return out[:, None]
+        from repro.kernels.flash_attention.kernel import flash_attention
+        return flash_attention(q, k, v, q_pos, kv_pos, window=window,
+                               causal=causal, interpret=dispatch.interpret())
+    from repro.kernels.flash_attention.ref import attention_ref
+    return attention_ref(q, k, v, q_pos, kv_pos, window=window, causal=causal)
+
+
+def ssd(x, dt, a, b, c, d_skip, chunk: int, init_state=None):
+    """Chunked SSD scan. See ssd_scan/ref.py for shapes."""
+    if dispatch.use_pallas():
+        from repro.kernels.ssd_scan.kernel import ssd_scan
+        return ssd_scan(x, dt, a, b, c, d_skip, chunk, init_state,
+                        interpret=dispatch.interpret())
+    from repro.models.ssm import ssd_chunked
+    return ssd_chunked(x, dt, a, b, c, d_skip, chunk, init_state)

@@ -1,0 +1,3 @@
+from repro.kernels.ssd_scan.ops import ssd_ref, ssd_scan, ssd_sequential
+
+__all__ = ["ssd_scan", "ssd_ref", "ssd_sequential"]

@@ -1,0 +1,23 @@
+"""Jit'd public wrapper for the SSD scan kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels import dispatch
+from repro.kernels.ssd_scan.kernel import ssd_scan as _kernel
+from repro.kernels.ssd_scan.ref import ssd_ref, ssd_sequential
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a, b, c, d_skip, chunk: int, init_state=None, *,
+             interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = dispatch.interpret()
+    return _kernel(x, dt, a, b, c, d_skip, chunk, init_state,
+                   interpret=interpret)
+
+
+__all__ = ["ssd_scan", "ssd_ref", "ssd_sequential"]

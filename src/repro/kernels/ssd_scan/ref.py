@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the SSD scan kernel.
+
+Delegates to the model's chunked SSD implementation — and additionally
+provides a *sequential* (non-chunked) recurrence, so the chunked algorithm
+itself is validated against the exact recurrence in tests.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_ref(x, dt, a, b, c, d_skip, chunk: int,
+            init_state: Optional[jax.Array] = None):
+    return ssd_chunked(x, dt, a, b, c, d_skip, chunk, init_state)
+
+
+def ssd_sequential(x, dt, a, b, c, d_skip,
+                   init_state: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Exact token-by-token recurrence (slow; ground truth).
+
+    Shapes as in :func:`repro.models.ssm.ssd_chunked`.
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    f32 = jnp.float32
+    s0 = (jnp.zeros((B, H, P, N), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                        # (B,H,P),(B,H),(B,N),(B,N)
+        dA = jnp.exp(dtt.astype(f32) * a)
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dtt.astype(f32), bt.astype(f32),
+                         xt.astype(f32))
+        state = state * dA[..., None, None] + dBx
+        y = jnp.einsum("bhpn,bn->bhp", state, ct.astype(f32))
+        return state, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(b, 1, 0), jnp.moveaxis(c, 1, 0))
+    final, ys = jax.lax.scan(step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                       # (B,S,H,P)
+    y = y + x.astype(f32) * d_skip[None, None, :, None]
+    return y.astype(x.dtype), final

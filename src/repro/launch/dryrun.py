@@ -1,0 +1,244 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) combination on
+the production meshes with ShapeDtypeStruct inputs (no allocation).
+
+Per case, records:
+  * memory_analysis (per-device bytes: args / outputs / temps / peak),
+  * cost_analysis (FLOPs, bytes accessed),
+  * collective operand bytes by kind (parsed from the partitioned HLO),
+  * roofline terms (EXPERIMENTS.md §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+Results land in experiments/dryrun/*.json (one file per case).
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, SHAPES, get_config
+from repro.launch.analytic import step_flops, step_hbm_bytes
+from repro.launch.hlo import collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import TRAIN_MICROBATCHES, build_case, decode_supported
+from repro.models.partitioning import tp_rules
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+# TPU v5e roofline constants (per chip)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def _shard_tree(mesh, spec_tree, arg_tree):
+    """NamedShardings from PartitionSpecs, dropping any dim sharding whose
+    mesh-axis product does not divide the dim (jit in_shardings require
+    exact divisibility — e.g. vocab 50280 or kv_heads 3 over 16 shards)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def sanitize(spec: P, shape):
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        out = []
+        for dim, entry in zip(shape, entries):
+            if entry is None:
+                out.append(None)
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            total = 1
+            for a in axes:
+                total *= sizes[a]
+            out.append(entry if dim % total == 0 else None)
+        return P(*out)
+
+    def mk(spec, arg):
+        if arg is None:
+            return None
+        spec = sanitize(spec if spec is not None else P(), arg.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(mk, spec_tree, arg_tree,
+                        is_leaf=lambda x: x is None or isinstance(x, P))
+
+
+def run_case(arch: str, shape_name: str, *, multi_pod: bool = False,
+             rules_kw: dict = None, save: bool = True,
+             label: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    skip = decode_supported(cfg, shape)
+    if skip:
+        res = {"arch": arch, "shape": shape_name, "skipped": skip}
+        if save:
+            _save(res, arch, shape_name, multi_pod, label)
+        return res
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    rules_kw = dict(rules_kw or {})
+    kv_dtype = None
+    if rules_kw.pop("kv_fp8", False):
+        import jax.numpy as jnp
+        kv_dtype = jnp.float8_e4m3fn
+    rules = tp_rules(multi_pod=multi_pod, axis_sizes=axis_sizes,
+                     mesh=mesh if rules_kw.get('expert_parallel') else None,
+                     **rules_kw)
+    case = build_case(cfg, shape, rules, kv_dtype=kv_dtype)
+
+    in_shardings = tuple(_shard_tree(mesh, s, a)
+                         for s, a in zip(case.in_specs, case.args))
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(case.fn, in_shardings=in_shardings,
+                         donate_argnums=case.donate)
+        lowered = jitted.lower(*case.args)
+        compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    flops_per_dev = float(cost.get("flops", 0.0))
+    bytes_per_dev = float(cost.get("bytes accessed", 0.0))
+    coll_total = float(sum(coll.values()))
+
+    # roofline terms (seconds).
+    # compute/memory: from the analytic estimator (XLA cost_analysis counts
+    # each while-loop body ONCE — a 40-layer scan undercounts ~40x; the raw
+    # numbers are still recorded below for reference).
+    # collective: HLO-parsed, trip-count corrected (launch/hlo.py).
+    if shape.kind == "train":
+        from repro.launch.specs import train_plan
+        n_micro, _ = train_plan(rules, shape)
+    else:
+        n_micro = 1
+    a_flops = step_flops(cfg, shape)
+    a_bytes = step_hbm_bytes(cfg, shape, n_chips, n_micro,
+                             kv_elem_bytes=1 if kv_dtype is not None else 2)
+    t_compute = a_flops / (n_chips * PEAK_FLOPS)
+    t_memory = a_bytes / HBM_BW
+    t_coll = coll_total / LINK_BW
+
+    model_flops = 6.0 * cfg.active_param_count() * (
+        shape.seq_len * shape.global_batch if shape.kind == "train" else 0)
+    if shape.kind == "prefill":
+        model_flops = 2.0 * cfg.active_param_count() * shape.seq_len * \
+            shape.global_batch
+    elif shape.kind == "decode":
+        model_flops = 2.0 * cfg.active_param_count() * shape.global_batch
+
+    res = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": list(mesh.devices.shape),
+        "n_chips": n_chips,
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes": (mem.argument_size_in_bytes
+                           + mem.output_size_in_bytes
+                           + mem.temp_size_in_bytes
+                           - mem.alias_size_in_bytes),
+        },
+        "xla_static_flops_per_device": flops_per_dev,
+        "xla_static_bytes_per_device": bytes_per_dev,
+        "analytic_flops_global": a_flops,
+        "analytic_hbm_bytes_per_device": a_bytes,
+        "collective_bytes": coll,
+        "roofline": {
+            "compute_s": t_compute,
+            "memory_s": t_memory,
+            "collective_s": t_coll,
+            "bottleneck": max(
+                (("compute", t_compute), ("memory", t_memory),
+                 ("collective", t_coll)), key=lambda kv: kv[1])[0],
+        },
+        "model_flops_global": model_flops,
+        "useful_flops_ratio": (model_flops / a_flops if a_flops else 0.0),
+        "rules": rules_kw or {},
+    }
+    if save:
+        _save(res, arch, shape_name, multi_pod, label)
+    return res
+
+
+def _save(res: dict, arch: str, shape: str, multi_pod: bool, label: str):
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    mesh_tag = "multipod" if multi_pod else "singlepod"
+    suffix = f"_{label}" if label else ""
+    f = RESULTS_DIR / f"{arch}_{shape}_{mesh_tag}{suffix}.json"
+    f.write_text(json.dumps(res, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--expert-parallel", action="store_true")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--kv-fp8", action="store_true")
+    ap.add_argument("--decode-kv", default="heads", choices=["heads", "seq"])
+    ap.add_argument("--label", default="")
+    args = ap.parse_args()
+
+    rules_kw = {}
+    if args.expert_parallel:
+        rules_kw["expert_parallel"] = True
+    if args.fsdp:
+        rules_kw["fsdp"] = True
+    if args.kv_fp8:
+        rules_kw["kv_fp8"] = True
+    if args.decode_kv != "heads":
+        rules_kw["decode_kv"] = args.decode_kv
+
+    archs = [args.arch] if args.arch else list(ASSIGNED_ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+                try:
+                    res = run_case(arch, shape, multi_pod=mp,
+                                   rules_kw=rules_kw, label=args.label)
+                    if "skipped" in res:
+                        print(f"SKIP {tag}: {res['skipped']}")
+                        continue
+                    r = res["roofline"]
+                    print(f"OK   {tag}: compile={res['compile_s']}s "
+                          f"peak={res['memory']['peak_bytes']/2**30:.2f}GiB/dev "
+                          f"compute={r['compute_s']*1e3:.2f}ms "
+                          f"memory={r['memory_s']*1e3:.2f}ms "
+                          f"coll={r['collective_s']*1e3:.2f}ms "
+                          f"bound={r['bottleneck']}")
+                except Exception as e:
+                    failures.append(tag)
+                    print(f"FAIL {tag}: {e}")
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

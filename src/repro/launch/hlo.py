@@ -1,0 +1,140 @@
+"""HLO text analysis: collective-communication byte accounting.
+
+``cost_analysis()`` does not expose collective traffic, so we parse the
+compiled (post-SPMD-partitioning) HLO and sum collective RESULT bytes per
+op kind — the collective term of the roofline reads from this.
+
+Two subtleties:
+* operands are printed without inline types in modern XLA, so we account
+  the result shape (for all-gather that's the full gathered tile each
+  device materializes; for all-reduce the reduced tile — a reasonable
+  per-device traffic proxy; ring all-reduce moves ~2x, noted in
+  EXPERIMENTS.md).
+* collectives inside ``while`` bodies (our layer scans / microbatch
+  accumulation) appear ONCE in the text but execute trip-count times —
+  we recover trip counts from the loop-condition constant and multiply.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_OP_RE = re.compile(
+    r"=\s*(\([^=]*?\)|\S+)\s+(" + "|".join(COLLECTIVES) + r")(-start)?\(")
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_WHILE_RE = re.compile(r"\bwhile\(.*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_WHILE_RE2 = re.compile(r"\bwhile\(.*?body=%?([\w.\-]+),\s*condition=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"\b(?:calls|to_apply|branch_computations)=\{?%?([\w.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _split_computations(hlo_text: str) -> Dict[str, str]:
+    """computation name -> its body text."""
+    comps: Dict[str, str] = {}
+    cur_name = None
+    cur_lines = []
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*(ENTRY\s+)?%?([\w.\-]+)\s*(\([^)]*\))?.*\{\s*$", line)
+        if m and ("(" in line and "{" in line):
+            cur_name = m.group(2)
+            cur_lines = []
+            continue
+        if line.strip() == "}" and cur_name is not None:
+            comps[cur_name] = "\n".join(cur_lines)
+            cur_name = None
+            continue
+        if cur_name is not None:
+            cur_lines.append(line)
+    return comps
+
+
+def _direct_bytes(body: str) -> Dict[str, int]:
+    out: Dict[str, int] = defaultdict(int)
+    for line in body.splitlines():
+        m = _OP_RE.search(line)
+        if m is None:
+            continue
+        if "-done(" in line:
+            continue
+        kind = m.group(2)
+        result = m.group(1)
+        nbytes = sum(_shape_bytes(d, dims)
+                     for d, dims in _SHAPE_RE.findall(result))
+        out[kind] += nbytes
+    return out
+
+
+def _trip_count(cond_body: str) -> int:
+    consts = [int(c) for c in _CONST_RE.findall(cond_body)]
+    return max(consts) if consts else 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Dynamic (trip-count weighted) collective result-bytes per kind."""
+    comps = _split_computations(hlo_text)
+    if not comps:                       # fallback: flat scan
+        return dict(_direct_bytes(hlo_text))
+
+    memo: Dict[str, Dict[str, int]] = {}
+
+    def total(name: str, stack=()) -> Dict[str, int]:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return {}
+        body = comps[name]
+        acc = defaultdict(int, _direct_bytes(body))
+        for line in body.splitlines():
+            mw = _WHILE_RE.search(line) or _WHILE_RE2.search(line)
+            if mw:
+                a, b = mw.group(1), mw.group(2)
+                # figure out which is the condition (contains a compare)
+                cond, wbody = (a, b) if "compare" in comps.get(a, "") else (b, a)
+                trips = _trip_count(comps.get(cond, ""))
+                sub = total(wbody, stack + (name,))
+                for k, v in sub.items():
+                    acc[k] += v * trips
+                continue
+            for cal in _CALL_RE.findall(line):
+                sub = total(cal, stack + (name,))
+                for k, v in sub.items():
+                    acc[k] += v
+        memo[name] = dict(acc)
+        return memo[name]
+
+    entry = None
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*ENTRY\s+%?([\w.\-]+)", line)
+        if m:
+            entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        # conservative: sum everything once
+        agg = defaultdict(int)
+        for body in comps.values():
+            for k, v in _direct_bytes(body).items():
+                agg[k] += v
+        return dict(agg)
+    return total(entry)
+
+
+def count_ops(hlo_text: str, name: str) -> int:
+    return len(re.findall(r"\b" + re.escape(name) + r"\(", hlo_text))

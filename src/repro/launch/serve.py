@@ -1,0 +1,99 @@
+"""Serving launcher: real-compute EPD-disaggregated serving on CPU-scale
+configs, or the paper-scale event simulator for any deployment topology.
+
+  # real tensors through the full EPD pipeline (reduced model):
+  PYTHONPATH=src python -m repro.launch.serve --arch llava-next-mistral-7b \\
+      --requests 8
+
+  # paper-scale simulation of a deployment at a given request rate:
+  PYTHONPATH=src python -m repro.launch.serve --simulate --deployment "(E-P)-D" \\
+      --rate 8 --arch openpangu-7b-vl
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+
+def run_real(args):
+    from repro.configs import get_config
+    from repro.core.cluster import EPDCluster
+    from repro.models.model import init_params
+    from repro.serving.request import Request
+
+    import jax.numpy as jnp
+    cfg = get_config(args.arch).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    cluster = EPDCluster(cfg, params, max_batch=4, max_len=96,
+                         kv_scheme=args.kv_scheme)
+    if args.kv_fp8:
+        # rebuild engines with fp8 KV storage (§Perf decode optimization)
+        from repro.serving.engine import Engine
+        cluster.prefill_engine = Engine(cfg, params, max_batch=1,
+                                        max_len=96,
+                                        kv_dtype=jnp.float8_e4m3fn)
+        cluster.decode_engine = Engine(cfg, params, max_batch=4, max_len=96,
+                                       kv_dtype=jnp.float8_e4m3fn)
+    reqs = []
+    for i in range(args.requests):
+        mm = (f"image-{i % 3}".encode()
+              if cfg.frontend is not None and i % 2 == 0 else None)
+        reqs.append(Request(
+            prompt_tokens=list(range(2, 2 + 8 + i % 5)),
+            max_new_tokens=args.max_new_tokens,
+            mm_payload=mm, mm_tokens=8 if mm and cfg.encoder is None else 0))
+    for r in reqs:
+        cluster.submit(r)
+    done = cluster.run_until_done()
+    for r in done:
+        path = "E-P-D" if r.is_multimodal else "P-D"
+        print(f"req {r.request_id} [{path}] -> {r.output_tokens}")
+    s = cluster.store.stats
+    print(f"MM store: {s} | mean KV overlap: "
+          f"{cluster.report.mean_kv_overlap:.3f} | recomputes: "
+          f"{cluster.report.recomputes}")
+
+
+def run_sim(args):
+    from repro.configs import get_config
+    from repro.core.simulator import SHAREGPT_4O, VISUALWEB, simulate
+
+    ds = SHAREGPT_4O if args.dataset == "sharegpt4o" else VISUALWEB
+    model = get_config(args.arch)
+    m = simulate(model, args.deployment, ds, rate=args.rate,
+                 n_requests=args.requests, kv_scheme=args.kv_scheme,
+                 per_chip_rate=args.per_chip_rate)
+    print(f"deployment={m.deployment} chips={m.n_chips}")
+    print(f"TTFT mean={m.mean_ttft_ms:.1f}ms p99={m.p99_ttft_ms:.1f}ms")
+    print(f"TPOT mean={m.mean_tpot_ms:.2f}ms p99={m.p99_tpot_ms:.2f}ms")
+    print(f"throughput={m.throughput_tok_s:.1f} tok/s; "
+          f"SLO(2000/50)={m.slo_attainment(2000, 50)*100:.1f}%; "
+          f"effective={m.effective_throughput(2000, 50):.1f} tok/s/chip")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llava-next-mistral-7b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--kv-scheme", default="grouped",
+                    choices=["one_shot", "layer_wise", "grouped"])
+    ap.add_argument("--kv-fp8", action="store_true",
+                    help="store KV in fp8_e4m3 (halves decode KV traffic)")
+    ap.add_argument("--simulate", action="store_true")
+    ap.add_argument("--deployment", default="E-P-D")
+    ap.add_argument("--rate", type=float, default=6.0)
+    ap.add_argument("--per-chip-rate", action="store_true")
+    ap.add_argument("--dataset", default="sharegpt4o",
+                    choices=["sharegpt4o", "visualweb"])
+    args = ap.parse_args()
+    if args.simulate:
+        args.requests = max(args.requests, 256)
+        run_sim(args)
+    else:
+        run_real(args)
+
+
+if __name__ == "__main__":
+    main()

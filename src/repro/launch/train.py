@@ -1,0 +1,56 @@
+"""Training launcher.
+
+CPU-scale real run:
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --steps 50
+
+Production-mesh dry-run of the same step is in repro.launch.dryrun.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.models.model import init_params
+from repro.models.params import count_params
+from repro.training.data import synthetic_batches
+from repro.training.optimizer import AdamW
+from repro.training.train import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--full-size", action="store_true",
+                    help="use the full config (default: reduced for CPU)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full_size:
+        cfg = cfg.reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    print(f"arch={cfg.name} params={count_params(params):,}")
+
+    opt = AdamW(lr=args.lr, warmup_steps=max(args.steps // 10, 1))
+    step_fn = jax.jit(make_train_step(cfg, opt, remat=False))
+    opt_state = opt.init(params)
+
+    t0 = time.time()
+    for i, batch in enumerate(synthetic_batches(
+            cfg, args.batch, args.seq, args.steps,
+            mm=cfg.frontend is not None and cfg.encoder is None)):
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss={float(metrics['loss']):.4f} "
+                  f"aux={float(metrics['aux']):.4f} "
+                  f"({(time.time()-t0)/(i+1)*1e3:.0f} ms/step)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Modality frontend STUBS (the one sanctioned carve-out, see DESIGN.md).
+
+The ViT / conv-codec trunk is not implemented; these helpers produce
+deterministic pseudo-embeddings of the right shape from raw input bytes /
+arrays, standing in for precomputed patch/frame features. The *projector*
+into d_model is a real learned parameter (``params['projector']``).
+
+``encode_tokens_for_image(resolution)`` mirrors the paper's Table 3 token
+counts so the serving simulator and MM Store see realistic payload sizes.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+# (H, W) -> n tokens, matching the paper's Table 3 for openPangu-7B-VL.
+PAPER_RESOLUTION_TOKENS = {
+    (280, 280): 100,
+    (560, 560): 400,
+    (640, 960): 529,
+    (720, 1280): 1196,
+    (1080, 1920): 2691,
+    (4096, 3112): 16206,
+}
+
+
+def encode_tokens_for_image(resolution: Tuple[int, int],
+                            patch: int = 28, merge: int = 1) -> int:
+    """Vision-token count for an image; follows the paper's scaling."""
+    if resolution in PAPER_RESOLUTION_TOKENS:
+        return PAPER_RESOLUTION_TOKENS[resolution]
+    h, w = resolution
+    return max(1, (h // patch) * (w // patch) // max(merge, 1))
+
+
+def content_hash(payload: bytes) -> str:
+    """Hash key for the MM Store (paper §3.2: hash of multimodal input)."""
+    return hashlib.sha256(payload).hexdigest()
+
+
+def stub_embeddings(cfg: ModelConfig, payload: bytes, n_tokens: int = 0,
+                    dtype=jnp.float32) -> jax.Array:
+    """Deterministic pseudo patch/frame embeddings for one item.
+
+    Shape (n_tokens, feature_dim). Deterministic in the payload so MM Store
+    cache hits return bit-identical features (tested).
+    """
+    fe = cfg.frontend
+    assert fe is not None, f"{cfg.name} has no frontend"
+    n = n_tokens or fe.tokens_per_item
+    seed = int.from_bytes(hashlib.sha256(payload).digest()[:4], "big")
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(key, (n, fe.feature_dim), dtype) * 0.02
+
+
+def feature_bytes(cfg: ModelConfig, n_tokens: int, dtype_bytes: int = 2) -> int:
+    """Size of the E->P payload for n vision/audio tokens (post-projector,
+    d_model-wide — what actually travels per the paper's Table 3)."""
+    return n_tokens * cfg.d_model * dtype_bytes

@@ -1,0 +1,161 @@
+"""Core transformer layers: RMSNorm, RoPE, GQA attention (full / sliding
+window, prefill / decode), gated MLP.
+
+All math is pure jnp (this is also the dry-run / roofline path); the
+Pallas kernels in ``repro.kernels`` are drop-in replacements dispatched in
+``ops.py`` when running on real TPU.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as K
+from repro.models.partitioning import shard
+
+_NEG_INF = -1e30
+
+
+def rms_norm(x, w, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def rope(x, positions, theta: float):
+    """x: (b, s, heads, head_dim), positions: (b, s) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (b, s, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+class AttnCache(NamedTuple):
+    """Per-pattern-position stacked KV cache.
+
+    k, v:    (repeats, batch, S, n_kv, head_dim)
+    kv_pos:  (repeats, batch, S) int32, -1 = empty slot. Sliding-window
+             archs use the cache as a ring buffer; kv_pos carries the
+             absolute position each slot holds so masking stays exact.
+    """
+
+    k: jax.Array
+    v: jax.Array
+    kv_pos: jax.Array
+
+
+def make_attn_cache(cfg: ModelConfig, n_repeats: int, batch: int, max_len: int,
+                    window: Optional[int], dtype=jnp.bfloat16,
+                    abstract: bool = False):
+    s = min(max_len, window) if window else max_len
+    kshape = (n_repeats, batch, s, cfg.n_kv_heads, cfg.head_dim)
+    pshape = (n_repeats, batch, s)
+    if abstract:
+        return AttnCache(jax.ShapeDtypeStruct(kshape, dtype),
+                         jax.ShapeDtypeStruct(kshape, dtype),
+                         jax.ShapeDtypeStruct(pshape, jnp.int32))
+    return AttnCache(jnp.zeros(kshape, dtype), jnp.zeros(kshape, dtype),
+                     jnp.full(pshape, -1, jnp.int32))
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def compute_cross_kv(p, enc_out, enc_pos, cfg: ModelConfig):
+    """Precompute cross-attention KV from encoder output (once per request)."""
+    k = _split_heads(enc_out @ p["xwk"], cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(enc_out @ p["xwv"], cfg.n_kv_heads, cfg.head_dim)
+    return k, v, enc_pos
+
+
+def cross_attention_block(p, x, positions, enc_kv, cfg: ModelConfig):
+    """Cross-attention with precomputed encoder KV; residual included."""
+    k, v, enc_pos = enc_kv
+    h = rms_norm(x, p["xnorm"], cfg.norm_eps)
+    q = _split_heads(h @ p["xwq"], cfg.n_heads, cfg.head_dim)
+    q = shard(q, "batch", None, "act_heads", None)
+    out = K.attention(q, k.astype(q.dtype), v.astype(q.dtype),
+                      positions, enc_pos, causal=False)
+    out = out.reshape(x.shape[0], x.shape[1], cfg.q_dim)
+    return x + shard(out @ p["xwo"], "batch", None, "act_embed")
+
+
+def attention_block(p, x, positions, cfg: ModelConfig, *, window=None,
+                    cache: Optional[Tuple[jax.Array, jax.Array, jax.Array]] = None,
+                    cur_len: Optional[jax.Array] = None,
+                    causal: bool = True):
+    """One self-attention sub-block with residual.
+
+    cache: per-repeat (k_cache, v_cache, kv_pos) views — (b, S, nkv, hd) /
+      (b, S). When given and x is a single decode token, the new KV is
+      written at slot ``cur_len % S`` (ring buffer; S == max_len for full
+      attention so the modulo is a no-op until overflow).
+    Returns (out, new_cache_views_or_None).
+    """
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    # q/k/v are constrained on their HEAD axes. When an arch's head count
+    # doesn't divide the model axis (whisper 8, smollm 9, glm4 kv=2) the
+    # divisibility guard in shard() turns the constraint into explicit
+    # replication — far cheaper than letting propagation split head_dim,
+    # which makes every QK^T contraction a partial-sum + all-reduce over
+    # the (s, S) score tensors (measured 52 GB/step on whisper prefill).
+    q = _split_heads(h @ p["wq"], cfg.n_heads, cfg.head_dim)
+    q = shard(q, "batch", None, "act_heads", None)
+    k = _split_heads(h @ p["wk"], cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(h @ p["wv"], cfg.n_kv_heads, cfg.head_dim)
+    k = shard(k, "batch", None, "act_kv_heads", None)
+    v = shard(v, "batch", None, "act_kv_heads", None)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        ck, cv, cpos = cache
+        S = ck.shape[1]
+        if x.shape[1] == 1:
+            # ---- decode: write one token into the ring buffer ----
+            slot = (cur_len % S).astype(jnp.int32)          # (b,)
+            bidx = jnp.arange(x.shape[0])
+            ck = ck.at[bidx, slot].set(k[:, 0].astype(ck.dtype))
+            cv = cv.at[bidx, slot].set(v[:, 0].astype(cv.dtype))
+            cpos = cpos.at[bidx, slot].set(positions[:, 0])
+            new_cache = (ck, cv, cpos)
+            out = K.attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                              positions, cpos, window=window)
+        else:
+            # ---- prefill into cache (serving): seq fits the buffer ----
+            pad = S - k.shape[1]
+            if pad < 0:
+                raise ValueError("prefill longer than cache")
+            kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            pp = jnp.pad(positions, ((0, 0), (0, pad)), constant_values=-1)
+            new_cache = (kp.astype(ck.dtype), vp.astype(cv.dtype), pp)
+            out = K.attention(q, k, v, positions, positions, window=window)
+    else:
+        # ---- training / encoder: no cache ----
+        out = K.attention(q, k, v, positions, positions, window=window,
+                          causal=causal)
+
+    out = out.reshape(x.shape[0], x.shape[1], cfg.q_dim)
+    out = shard(out @ p["wo"], "batch", None, "act_embed")
+    return x + out, new_cache
+
+
+def mlp_block(p, x, cfg: ModelConfig):
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    up = shard(h @ p["wi"], "batch", None, "act_ff")
+    gate = shard(h @ p["wg"], "batch", None, "act_ff")
+    out = (jax.nn.silu(gate) * up) @ p["wo"]
+    return x + shard(out, "batch", None, "act_embed")

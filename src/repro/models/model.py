@@ -1,0 +1,131 @@
+"""Public model API: build / init / forward per mode.
+
+Three entry points used by training, serving and the dry-run:
+
+* ``train_forward``   — full-seq causal LM loss path (no caches, remat).
+* ``prefill_forward`` — full-seq forward populating caches, last-token logits.
+* ``decode_forward``  — one-token step against caches.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.models.layers import rms_norm
+from repro.models.params import (abstract_params, init_params, param_pspecs,
+                                 param_structure)
+from repro.models.partitioning import shard
+
+
+def _ce_loss(params, cfg: ModelConfig, h_text, targets):
+    """Token-mean cross entropy; returns (sum_nll, n_valid)."""
+    logits = T.lm_logits(params, cfg, h_text).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(
+        logp, targets[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    mask = (targets >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask), jnp.sum(mask)
+
+
+def train_forward(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+                  *, remat: bool = True, loss_chunk: int = 0
+                  ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Causal-LM loss. batch: tokens (B,S_t), labels (B,S_t), optional
+    mm_embeds (B,n_mm,feat) and enc_frames (B,T,feat).
+
+    loss_chunk > 0: compute the lm-head matmul + cross entropy in sequence
+    chunks under lax.scan so the (B, S, vocab) logits tensor never
+    materializes — required for FSDP training where the batch is spread
+    over all mesh axes and vocab cannot also be sharded.
+    """
+    tokens = batch["tokens"]
+    x, positions = T.embed_inputs(params, cfg, tokens, batch.get("mm_embeds"))
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = T.run_encoder(params, cfg, batch["enc_frames"])
+    h, _, aux = T.run_decoder(params, cfg, x, positions, caches=None,
+                              enc_out=enc_out, remat=remat)
+    n_mm = x.shape[1] - tokens.shape[1]
+    h_text = h[:, n_mm:]
+    # next-token prediction within the text segment
+    h_pred = h_text[:, :-1]
+    targets = batch["labels"][:, 1:]
+    if loss_chunk and h_pred.shape[1] > loss_chunk:
+        c = loss_chunk
+        pad = (-h_pred.shape[1]) % c
+        if pad:
+            h_pred = jnp.pad(h_pred, ((0, 0), (0, pad), (0, 0)))
+            targets = jnp.pad(targets, ((0, 0), (0, pad)),
+                              constant_values=-1)
+        nc = h_pred.shape[1] // c
+        hc = jnp.moveaxis(h_pred.reshape(h_pred.shape[0], nc, c, -1), 1, 0)
+        tc = jnp.moveaxis(targets.reshape(targets.shape[0], nc, c), 1, 0)
+
+        def step(carry, inp):
+            s, n = carry
+            hi, ti = inp
+            ds, dn = _ce_loss(params, cfg, hi, ti)
+            return (s + ds, n + dn), None
+
+        (sum_nll, n_valid), _ = jax.lax.scan(
+            step, (jnp.zeros(()), jnp.zeros(())), (hc, tc))
+    else:
+        sum_nll, n_valid = _ce_loss(params, cfg, h_pred, targets)
+    loss = sum_nll / jnp.clip(n_valid, 1.0)
+    aux_w = 0.01
+    total = loss + aux_w * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+def prefill_forward(params, cfg: ModelConfig, tokens, caches,
+                    *, lengths: Optional[jax.Array] = None,
+                    mm_embeds=None, enc_frames=None):
+    """Populate caches from a (padded) prompt batch.
+
+    lengths: (B,) true prompt lengths (including mm tokens). Padded
+    positions get position -1 so they are masked everywhere.
+    Returns (last_token_logits (B,vocab), new_caches).
+    """
+    x, positions = T.embed_inputs(params, cfg, tokens, mm_embeds)
+    if lengths is not None:
+        idx = jnp.arange(x.shape[1], dtype=jnp.int32)[None]
+        positions = jnp.where(idx < lengths[:, None], idx, -1)
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = T.run_encoder(params, cfg, enc_frames)
+    h, new_caches, _ = T.run_decoder(params, cfg, x, positions, caches=caches,
+                                     enc_out=enc_out)
+    if lengths is not None:
+        last = jnp.clip(lengths - 1, 0)
+        new_caches["len"] = lengths
+    else:
+        last = jnp.full((x.shape[0],), x.shape[1] - 1, jnp.int32)
+        new_caches["len"] = jnp.full((x.shape[0],), x.shape[1], jnp.int32)
+    h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)  # (B,1,d)
+    logits = T.lm_logits(params, cfg, h_last)[:, 0]
+    return logits.astype(jnp.float32), new_caches
+
+
+def decode_forward(params, cfg: ModelConfig, tokens, caches):
+    """One decode step. tokens: (B,) int32 previous tokens.
+
+    Position of the new token is caches['len'] (per row). Returns
+    (logits (B,vocab), new_caches).
+    """
+    positions = caches["len"][:, None].astype(jnp.int32)          # (B,1)
+    x = params["embed"][tokens[:, None]]
+    x = shard(x, "batch", None, "act_embed")
+    h, new_caches, _ = T.run_decoder(params, cfg, x, positions, caches=caches)
+    logits = T.lm_logits(params, cfg, h)[:, 0]
+    return logits.astype(jnp.float32), new_caches
+
+
+# re-exports for convenience
+__all__ = [
+    "train_forward", "prefill_forward", "decode_forward",
+    "init_params", "abstract_params", "param_pspecs", "param_structure",
+]

@@ -1,0 +1,148 @@
+"""Top-k MoE with sort-based capacity dispatch (dropped-token, GShard-style
+capacity but without materializing the (T, E, C) one-hot).
+
+Dispatch is per batch row ("group" = one sequence), so with batch sharded
+over the data axis no cross-shard communication is needed until the expert
+einsum itself. Three sharding modes (see partitioning.tp_rules):
+
+* MoE-TP (baseline, paper-faithful analogue): every expert's d_ff sharded
+  over 'model'; experts replicated. No all-to-all.
+* Expert-sharded SPMD ('act_expert' mapped): lets XLA propagate — measured
+  to be pathological (it replicates the dispatch buffers; EXPERIMENTS.md
+  §Perf pair 2, iteration 2).
+* Explicit shard_map EP (``rules.mesh`` set + expert axis mapped): the
+  expert buffers cross the mesh with a REAL all-to-all at the shard_map
+  boundary, each model-rank computes only its own experts, and ZeRO-
+  sharded expert weights are gathered over 'data' inside the kernel.
+"""
+from __future__ import annotations
+
+from functools import partial
+from math import ceil
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.partitioning import current_rules, shard
+
+
+def capacity(cfg: ModelConfig, seq: int) -> int:
+    moe = cfg.moe
+    c = ceil(seq * moe.top_k / moe.n_experts * moe.capacity_factor)
+    return max(1, min(c, seq * moe.top_k))
+
+
+def moe_block(p, x, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x + moe_out, aux_load_balance_loss)."""
+    moe = cfg.moe
+    B, S, d = x.shape
+    E, k = moe.n_experts, moe.top_k
+    C = capacity(cfg, S)
+
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    logits = (h.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (B,S,E)
+    gates, eidx = jax.lax.top_k(probs, k)                      # (B,S,k)
+    gates = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+
+    # ---- aux load-balance loss (Switch-style) ----
+    me = probs.mean(axis=(0, 1))                               # (E,)
+    one_hot_top1 = jax.nn.one_hot(eidx[..., 0], E, dtype=jnp.float32)
+    ce = one_hot_top1.mean(axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    # ---- sort-based position-in-expert ----
+    T = S * k
+    fe = eidx.reshape(B, T)                                    # expert of each selection
+    sort_idx = jnp.argsort(fe, axis=1)                         # (B,T) stable
+    sorted_e = jnp.take_along_axis(fe, sort_idx, axis=1)
+    counts = jnp.sum(jax.nn.one_hot(fe, E, dtype=jnp.int32), axis=1)  # (B,E)
+    starts = jnp.concatenate(
+        [jnp.zeros((B, 1), jnp.int32), jnp.cumsum(counts, axis=1)[:, :-1]],
+        axis=1)                                                # (B,E)
+    pos_sorted = (jnp.arange(T)[None, :]
+                  - jnp.take_along_axis(starts, sorted_e, axis=1))  # rank in expert
+    keep = pos_sorted < C
+    slot_sorted = jnp.where(keep, sorted_e * C + pos_sorted, E * C)  # E*C = trash
+
+    # scatter tokens into (B, E*C+1, d) expert buffers
+    tok_sorted = sort_idx // k                                 # original token index
+    hk = jnp.take_along_axis(
+        h, tok_sorted[..., None], axis=1)                      # (B,T,d)
+    buf = jnp.zeros((B, E * C + 1, d), h.dtype)
+    buf = jax.vmap(lambda bb, ss, hh: bb.at[ss].set(hh))(buf, slot_sorted, hk)
+    ebuf = buf[:, : E * C].reshape(B, E, C, d)
+
+    # ---- expert computation (gated MLP) ----
+    rules = current_rules()
+    if rules is not None and getattr(rules, "mesh", None) is not None \
+            and rules.size("expert") > 1 and E % rules.size("expert") == 0:
+        out = _expert_ffn_shard_map(p, ebuf, rules)
+    else:
+        ebuf = shard(ebuf, "batch", "act_expert", None, None)
+        up = jnp.einsum("becd,edf->becf", ebuf, p["wi"])
+        gate = jnp.einsum("becd,edf->becf", ebuf, p["wg"])
+        act = jax.nn.silu(gate) * up
+        act = shard(act, "batch", "act_expert", None, "act_ff")
+        out = jnp.einsum("becf,efd->becd", act, p["wo"])
+        out = shard(out, "batch", "act_expert", None, None)
+
+    # ---- combine: gather back, weight by gates, sum over k ----
+    obuf = jnp.concatenate(
+        [out.reshape(B, E * C, d), jnp.zeros((B, 1, d), out.dtype)], axis=1)
+    got = jax.vmap(lambda ob, ss: ob[ss])(obuf, slot_sorted)   # (B,T,d)
+    gat_sorted = jnp.take_along_axis(
+        gates.reshape(B, T), sort_idx, axis=1)
+    got = got * jnp.where(keep, gat_sorted, 0.0)[..., None].astype(got.dtype)
+    # scatter-add back to token order: token t receives its k selections
+    y = jnp.zeros((B, S, d), got.dtype)
+    y = jax.vmap(lambda yy, tt, gg: yy.at[tt].add(gg))(y, tok_sorted, got)
+    y = shard(y, "batch", None, "act_embed")
+    return x + y, aux
+
+
+# ---------------------------------------------------------------------------
+# Explicit expert parallelism (shard_map)
+# ---------------------------------------------------------------------------
+
+def _expert_ffn_shard_map(p, ebuf, rules):
+    """Expert FFN with REAL expert parallelism.
+
+    At the shard_map boundary XLA emits an all-to-all resharding ebuf from
+    batch-sharded to (batch x expert)-sharded; each model-rank runs ONLY
+    its E/ep experts; weights arrive ZeRO-sharded along d over 'data' and
+    are all-gathered inside the kernel (per-layer, per-rank slice only —
+    not every expert everywhere, which is what sank the SPMD attempt).
+    """
+    mesh = rules.mesh
+    expert_axis = rules.rules.get("expert")            # e.g. 'model'
+    zero_axis = rules.rules.get("embed")               # 'data' under ZeRO-3
+    batch_axes = rules.rules.get("batch")
+
+    wi, wg, wo = p["wi"], p["wg"], p["wo"]
+    E, dd, f = wi.shape
+    gather_d = (zero_axis is not None and
+                dd % rules.axis_sizes.get(zero_axis, 1) == 0)
+
+    w_spec = P(expert_axis, zero_axis if gather_d else None, None)
+    wo_spec = P(expert_axis, None, zero_axis if gather_d else None)
+    buf_spec = P(batch_axes, expert_axis, None, None)
+
+    def kernel(eb, wi_l, wg_l, wo_l):
+        # eb: (B_loc, E_loc, C, d); w*_l: (E_loc, d/z, f) / (E_loc, f, d/z)
+        if gather_d:
+            wi_l = jax.lax.all_gather(wi_l, zero_axis, axis=1, tiled=True)
+            wg_l = jax.lax.all_gather(wg_l, zero_axis, axis=1, tiled=True)
+            wo_l = jax.lax.all_gather(wo_l, zero_axis, axis=2, tiled=True)
+        up = jnp.einsum("becd,edf->becf", eb, wi_l)
+        gate = jnp.einsum("becd,edf->becf", eb, wg_l)
+        return jnp.einsum("becf,efd->becd", jax.nn.silu(gate) * up, wo_l)
+
+    fn = jax.shard_map(kernel, mesh=mesh,
+                       in_specs=(buf_spec, w_spec, w_spec, wo_spec),
+                       out_specs=buf_spec)
+    return fn(ebuf, wi, wg, wo)

@@ -1,0 +1,182 @@
+"""Parameter structure: single source of truth for shapes + logical axes.
+
+``param_structure(cfg)`` returns a pytree of ``ParamSpec``; ``init_params``
+materializes it with real values (CPU tests), ``abstract_params`` with
+``ShapeDtypeStruct`` (dry-run), and ``param_pspecs`` with PartitionSpec
+(jit in_shardings) — all from the same tree, so sharding and shapes can
+never drift apart.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models.partitioning import ShardingRules, logical_to_pspec
+
+
+class ParamSpec(NamedTuple):
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # 'normal' | 'zeros' | 'ones' | 'ssm_a'
+
+
+def _stack(spec_tree, n: int):
+    """Prepend a scanned 'layers' dim to every leaf."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.init),
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# -- per-block specs ---------------------------------------------------------
+
+def attn_spec(cfg: ModelConfig, cross: bool = False) -> Dict[str, ParamSpec]:
+    d, q, kv = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    out = {
+        "norm": ParamSpec((d,), ("embed",), "ones"),
+        "wq": ParamSpec((d, q), ("embed", "q")),
+        "wk": ParamSpec((d, kv), ("embed", "kv")),
+        "wv": ParamSpec((d, kv), ("embed", "kv")),
+        "wo": ParamSpec((q, d), ("q", "embed")),
+    }
+    if cross:
+        out.update({
+            "xnorm": ParamSpec((d,), ("embed",), "ones"),
+            "xwq": ParamSpec((d, q), ("embed", "q")),
+            "xwk": ParamSpec((d, kv), ("embed", "kv")),
+            "xwv": ParamSpec((d, kv), ("embed", "kv")),
+            "xwo": ParamSpec((q, d), ("q", "embed")),
+        })
+    return out
+
+
+def mlp_spec(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "norm": ParamSpec((d,), ("embed",), "ones"),
+        "wi": ParamSpec((d, f), ("embed", "ff")),      # up
+        "wg": ParamSpec((d, f), ("embed", "ff")),      # gate
+        "wo": ParamSpec((f, d), ("ff", "embed")),      # down
+    }
+
+
+def moe_spec(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    return {
+        "norm": ParamSpec((d,), ("embed",), "ones"),
+        "router": ParamSpec((d, e), ("embed", None)),
+        "wi": ParamSpec((e, d, f), ("expert", "embed", "ff")),
+        "wg": ParamSpec((e, d, f), ("expert", "embed", "ff")),
+        "wo": ParamSpec((e, f, d), ("expert", "ff", "embed")),
+    }
+
+
+def ssm_spec(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    ssm = cfg.ssm
+    d = cfg.d_model
+    inner = ssm.inner_dim(d)
+    nh = ssm.n_heads(d)
+    n = ssm.state_dim
+    conv_dim = inner + 2 * n      # x, B, C go through the causal conv
+    return {
+        "norm": ParamSpec((d,), ("embed",), "ones"),
+        # in_proj -> [z(inner), xBC(conv_dim), dt(nh)]
+        "w_in": ParamSpec((d, 2 * inner + 2 * n + nh), ("embed", "inner")),
+        "conv_w": ParamSpec((ssm.conv_width, conv_dim), (None, "inner")),
+        "conv_b": ParamSpec((conv_dim,), ("inner",), "zeros"),
+        "a_log": ParamSpec((nh,), ("heads",), "ssm_a"),
+        "d_skip": ParamSpec((nh,), ("heads",), "ones"),
+        "dt_bias": ParamSpec((nh,), ("heads",), "zeros"),
+        "out_norm": ParamSpec((inner,), ("inner",), "ones"),
+        "w_out": ParamSpec((inner, d), ("inner", "embed")),
+    }
+
+
+def block_spec(cfg: ModelConfig, spec: LayerSpec) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    if spec.mixer in ("attn", "swa"):
+        out["attn"] = attn_spec(cfg, cross=cfg.encoder is not None)
+    elif spec.mixer == "ssm":
+        out["ssm"] = ssm_spec(cfg)
+    if spec.ffn == "mlp":
+        out["mlp"] = mlp_spec(cfg)
+    elif spec.ffn == "moe":
+        out["moe"] = moe_spec(cfg)
+    return out
+
+
+def encoder_layer_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    base = {k: v for k, v in attn_spec(cfg).items()}
+    return {"attn": base, "mlp": mlp_spec(cfg)}
+
+
+# -- whole-model structure ---------------------------------------------------
+
+def param_structure(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    tree: Dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab, d), ("vocab", "embed")),
+        "final_norm": ParamSpec((d,), ("embed",), "ones"),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = ParamSpec((d, cfg.vocab), ("embed", "vocab"))
+    # decoder blocks: one stacked entry per pattern position
+    tree["blocks"] = [
+        _stack(block_spec(cfg, s), cfg.n_repeats) for s in cfg.pattern
+    ]
+    if cfg.encoder is not None:
+        tree["encoder"] = {
+            "layers": _stack(encoder_layer_spec(cfg), cfg.encoder.n_layers),
+            "final_norm": ParamSpec((d,), ("embed",), "ones"),
+            "pos_embed": ParamSpec((cfg.encoder.n_ctx, d), (None, "embed")),
+        }
+    if cfg.frontend is not None:
+        tree["projector"] = ParamSpec(
+            (cfg.frontend.feature_dim, d), (None, "embed"))
+    return tree
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        param_structure(cfg), is_leaf=_is_spec)
+
+
+def param_pspecs(cfg: ModelConfig, rules: Optional[ShardingRules]):
+    return jax.tree.map(
+        lambda s: logical_to_pspec(s.axes, rules),
+        param_structure(cfg), is_leaf=_is_spec)
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    """Materialize real parameter values (for CPU-scale configs)."""
+    tree = param_structure(cfg)
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+
+    def mk(spec: ParamSpec, k):
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dtype)
+        if spec.init == "ssm_a":
+            # A in [-1, -e]: log of uniform in [1, e]
+            u = jax.random.uniform(k, spec.shape, jnp.float32, 1.0, math.e)
+            return jnp.log(u).astype(dtype)
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = 1.0 / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, spec.shape, jnp.float32) * std).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [mk(s, k) for s, k in zip(leaves, keys)])
+
+
+def count_params(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))

@@ -1,0 +1,183 @@
+"""Logical-axis partitioning (MaxText-style, lightweight).
+
+Model code names tensor dims with *logical* axes ('batch', 'embed', 'q',
+'ff', 'expert', ...). A ``ShardingRules`` maps logical names to mesh axes.
+Outside a rules context everything is a no-op, so the same model code runs
+on a single CPU device and under the 512-chip dry-run meshes.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """logical axis -> mesh axis (or tuple of mesh axes)."""
+
+    rules: Dict[str, MeshAxes] = field(default_factory=dict)
+    axis_sizes: Dict[str, int] = field(default_factory=dict)
+    # concrete jax Mesh — required only for the explicit shard_map
+    # expert-parallel path (models/moe.py); None elsewhere
+    mesh: object = None
+
+    def spec(self, axes: Tuple[Optional[str], ...]) -> P:
+        return P(*(self.rules.get(a) if a is not None else None for a in axes))
+
+    def size(self, logical: str) -> int:
+        """Number of shards the mapping of `logical` implies (1 if unknown)."""
+        m = self.rules.get(logical)
+        if m is None:
+            return 1
+        axes = m if isinstance(m, tuple) else (m,)
+        n = 1
+        for a in axes:
+            n *= self.axis_sizes.get(a, 1)
+        return n
+
+
+# Baseline (paper-faithful megatron-style TP + DP) rule sets -----------------
+
+def tp_rules(*, multi_pod: bool = False, expert_parallel: bool = False,
+             decode_kv: str = "heads", fsdp: bool = False,
+             axis_sizes: Optional[Dict[str, int]] = None,
+             mesh=None) -> ShardingRules:
+    """Sharding rules over the production mesh.
+
+    Baseline (paper-faithful analogue): megatron-style TP over 'model',
+    data parallel over 'data' (x 'pod').
+
+    expert_parallel: shard the expert axis over 'model' (all-to-all MoE)
+      instead of sharding every expert's d_ff (megatron MoE-TP).
+    decode_kv: 'heads' shards the decode KV cache over kv-heads (classic
+      TP), 'seq' shards it over sequence (flash-decode style) — a
+      beyond-paper optimization knob, see EXPERIMENTS.md §Perf.
+    fsdp: beyond-paper training mode — batch over BOTH mesh axes (pure
+      data parallel), weights/optimizer ZeRO-3 sharded over
+      ('data' x 'model') via their two named dims; XLA materializes the
+      per-layer all-gathers. Kills the TP activation all-reduces that
+      dominate the baseline's collective roofline term.
+
+    Weight dims and activation dims use distinct logical names
+    ('embed' vs 'act_embed', ...) so FSDP can shard parameters along
+    dims whose activation counterparts stay replicated.
+    """
+    batch = ("pod", "data") if multi_pod else ("data",)
+    if fsdp:
+        # FSDP(+EP) training modes — beyond-paper §Perf variants.
+        # Dense FSDP: batch over BOTH axes (pure DP, global_batch=256 ==
+        #   data x model), weights ZeRO-3 sharded 256-way via two dims.
+        # MoE hybrid (fsdp+expert_parallel): batch over 'data' only so the
+        #   'model' axis can carry the EXPERT dim — tokens all-to-all to
+        #   their expert's shard instead of every device gathering every
+        #   expert. Weights still ZeRO-3 over 'data'.
+        # Under multi-pod the pod axis replicates (context parallelism
+        # would be the next step — noted in EXPERIMENTS.md §Perf).
+        batch = ("data",) if expert_parallel else ("data", "model")
+        rules: Dict[str, MeshAxes] = {
+            "batch": batch,
+            "seq": None,
+            # weights: ZeRO-3 sharded over both axes via two dims
+            "embed": "data",
+            "vocab": "model",
+            "q": "model",
+            "kv": "model",
+            "heads": None,
+            # expert-parallel: the expert dim takes 'model'; the per-expert
+            # d_ff stays whole (gathered per use like other ZeRO weights)
+            "ff": None if expert_parallel else "model",
+            "expert": "model" if expert_parallel else None,
+            "inner": "model",
+            "state": None,
+            "layers": None,
+            # activations: replicated along feature dims (pure DP), except
+            # the expert dim in the MoE hybrid (drives the all-to-all)
+            "act_embed": None,
+            "act_ff": None,
+            "act_inner": None,
+            "act_vocab": None,
+            "act_heads": None,
+            "act_kv_heads": None,
+            "act_expert": "model" if expert_parallel else None,
+            "kv_seq": None,
+            "kv_heads": None,
+        }
+        return ShardingRules(rules, axis_sizes or {}, mesh)
+    rules = {
+        "batch": batch,
+        "seq": None,
+        "embed": None,
+        "vocab": "model",
+        "q": "model",            # q_dim = n_heads * head_dim
+        "kv": "model",           # kv_dim = n_kv_heads * head_dim
+        "heads": "model",
+        "ff": None if expert_parallel else "model",
+        "expert": "model" if expert_parallel else None,
+        "inner": "model",        # ssm inner dim
+        "state": None,
+        "layers": None,
+        "act_embed": None,
+        "act_ff": None if expert_parallel else "model",
+        "act_inner": "model",
+        "act_vocab": "model",
+        "act_heads": "model",
+        "act_kv_heads": "model",
+        "act_expert": "model" if expert_parallel else None,
+        "kv_seq": "model" if decode_kv == "seq" else None,
+        "kv_heads": "model" if decode_kv == "heads" else None,
+    }
+    return ShardingRules(rules, axis_sizes or {}, mesh)
+
+
+_tls = threading.local()
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_tls, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = current_rules()
+    _tls.rules = rules
+    try:
+        yield
+    finally:
+        _tls.rules = prev
+
+
+def shard(x, *axes: Optional[str]):
+    """Constrain ``x`` to the sharding implied by logical ``axes``.
+
+    No-op when no rules are active (single-device tests). Dims whose size
+    is not divisible by the mapped mesh-axis product are left unsharded —
+    forcing e.g. 8 whisper heads onto a 16-way model axis makes XLA
+    replicate the whole tensor ('involuntary full rematerialization'),
+    which showed up as ~1.2 TB/step of spurious all-gathers.
+    """
+    rules = current_rules()
+    if rules is None:
+        return x
+    entries = []
+    for dim, a in zip(x.shape, axes):
+        m = rules.rules.get(a) if a is not None else None
+        if m is None:
+            entries.append(None)
+            continue
+        n = rules.size(a)
+        entries.append(m if n <= 1 or dim % n == 0 else None)
+    return jax.lax.with_sharding_constraint(x, P(*entries))
+
+
+def logical_to_pspec(axes: Tuple[Optional[str], ...],
+                     rules: Optional[ShardingRules]) -> P:
+    if rules is None:
+        return P()
+    return rules.spec(axes)

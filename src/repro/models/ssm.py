@@ -1,0 +1,204 @@
+"""Mamba2 / SSD (state-space duality) layer — chunked matmul form.
+
+The chunked algorithm (arXiv:2405.21060 §6) is MXU-friendly: intra-chunk
+work is batched matmuls, inter-chunk work is a short ``lax.scan`` over
+chunk states. The Pallas kernel in ``repro.kernels.ssd_scan`` implements
+the same algorithm with explicit VMEM tiling; this module is the pure-jnp
+path (and the kernel's oracle lives in ``kernels/ssd_scan/ref.py``, which
+delegates to :func:`ssd_chunked`).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.partitioning import shard
+
+
+class SSMCache(NamedTuple):
+    """Stacked per-repeat recurrent state.
+
+    state: (repeats, batch, heads, head_dim, state_dim)  — SSD state
+    conv:  (repeats, batch, conv_width-1, conv_dim)      — conv tail
+    """
+
+    state: jax.Array
+    conv: jax.Array
+
+
+def make_ssm_cache(cfg: ModelConfig, n_repeats: int, batch: int,
+                   dtype=jnp.float32, abstract: bool = False):
+    ssm = cfg.ssm
+    inner = ssm.inner_dim(cfg.d_model)
+    nh = ssm.n_heads(cfg.d_model)
+    conv_dim = inner + 2 * ssm.state_dim
+    sshape = (n_repeats, batch, nh, ssm.head_dim, ssm.state_dim)
+    cshape = (n_repeats, batch, ssm.conv_width - 1, conv_dim)
+    if abstract:
+        return SSMCache(jax.ShapeDtypeStruct(sshape, jnp.float32),
+                        jax.ShapeDtypeStruct(cshape, dtype))
+    return SSMCache(jnp.zeros(sshape, jnp.float32), jnp.zeros(cshape, dtype))
+
+
+def _segsum(log_a):
+    """(..., L) -> (..., L, L) lower-triangular cumulative log-decays."""
+    L = log_a.shape[-1]
+    cum = jnp.cumsum(log_a, axis=-1)
+    # decay from j (exclusive) to i (inclusive): cum_i - cum_j
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b, c, d_skip, chunk: int,
+                init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.
+
+    x:  (B, S, H, P)   inputs per head
+    dt: (B, S, H)      positive step sizes (already softplus'ed)
+    a:  (H,)           negative decay rates (A = -exp(a_log))
+    b:  (B, S, N)      input projection (single group shared over heads)
+    c:  (B, S, N)      output projection
+    d_skip: (H,)       skip connection
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    nc = S // chunk
+    assert nc * chunk == S, f"seq {S} not divisible by chunk {chunk}"
+
+    f32 = jnp.float32
+    xc = x.reshape(B, nc, chunk, H, P).astype(f32)
+    dtc = dt.reshape(B, nc, chunk, H).astype(f32)
+    bc = b.reshape(B, nc, chunk, N).astype(f32)
+    cc = c.reshape(B, nc, chunk, N).astype(f32)
+
+    log_dA = dtc * a  # (B,nc,L,H)  a<0
+    log_dA_t = jnp.moveaxis(log_dA, -1, -2)          # (B,nc,H,L)
+    seg = _segsum(log_dA_t)                          # (B,nc,H,L,L)
+    decay = jnp.exp(seg)
+
+    # diagonal (intra-chunk) term
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)       # (B,nc,L,L)
+    scores = cb[:, :, None] * decay                  # (B,nc,H,L,L)
+    xdt = xc * dtc[..., None]                        # (B,nc,L,H,P)
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", scores, xdt)
+
+    # chunk states: decay from j to end of chunk
+    cum = jnp.cumsum(log_dA_t, axis=-1)              # (B,nc,H,L)
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)      # (B,nc,H,L)
+    states = jnp.einsum("bchj,bcjn,bcjhp->bchpn",
+                        decay_to_end, bc, xdt)       # (B,nc,H,P,N)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[..., -1])              # (B,nc,H)
+    s0 = (jnp.zeros((B, H, P, N), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def step(carry, inp):
+        st, cd = inp                                  # (B,H,P,N), (B,H)
+        new = carry * cd[..., None, None] + st
+        return new, carry                             # emit state BEFORE chunk
+
+    xs = (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    final, prev_states = jax.lax.scan(step, s0, xs)
+    prev_states = jnp.moveaxis(prev_states, 0, 1)     # (B,nc,H,P,N)
+
+    # off-diagonal (inter-chunk) term: y_off[i] = C_i . (decay_in * prev)
+    decay_in = jnp.exp(cum)                           # (B,nc,H,L)
+    y_off = jnp.einsum("bcin,bchpn,bchi->bcihp", cc, prev_states, decay_in)
+
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    y = y + x.astype(f32) * d_skip[None, None, :, None]
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(x, dt, a, b, c, d_skip, state):
+    """Single-token SSD state update.
+
+    x: (B,H,P), dt: (B,H), b,c: (B,N), state: (B,H,P,N) f32.
+    """
+    f32 = jnp.float32
+    x32, dt32 = x.astype(f32), dt.astype(f32)
+    dA = jnp.exp(dt32 * a)                            # (B,H)
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt32, b.astype(f32), x32)
+    new_state = state * dA[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", new_state, c.astype(f32))
+    y = y + x32 * d_skip[None, :, None]
+    return y.astype(x.dtype), new_state
+
+
+def _causal_conv(xbc, w, bias, tail=None):
+    """Depthwise causal conv, width W. xbc: (B,S,D), w: (W,D), tail: (B,W-1,D)."""
+    W = w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = tail.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)        # (B, S+W-1, D)
+    out = sum(full[:, i:i + xbc.shape[1]] * w[i] for i in range(W))
+    new_tail = full[:, -(W - 1):] if W > 1 else None
+    return out + bias, new_tail
+
+
+def ssm_block(p, x, cfg: ModelConfig, *, cache=None, positions=None):
+    """One Mamba2 block with residual.
+
+    cache: per-repeat (state (B,H,P,N), conv_tail (B,W-1,D)) or None.
+    positions: (B,S) with -1 for padding — padded steps get dt=0 so they
+      leave the recurrent state untouched.
+    x: (B,S,d). Returns (out, new_cache_or_None).
+    """
+    ssm = cfg.ssm
+    d = cfg.d_model
+    inner = ssm.inner_dim(d)
+    nh = ssm.n_heads(d)
+    N = ssm.state_dim
+
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = h @ p["w_in"]                            # (B,S, 2*inner+2N+nh)
+    zxbcdt = shard(zxbcdt, "batch", None, "act_inner")
+    z = zxbcdt[..., :inner]
+    xbc = zxbcdt[..., inner: 2 * inner + 2 * N]
+    dt = zxbcdt[..., 2 * inner + 2 * N:]              # (B,S,nh)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    if positions is not None:
+        dt = dt * (positions >= 0).astype(jnp.float32)[..., None]
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))      # (nh,)
+    dsk = p["d_skip"].astype(jnp.float32)
+
+    decode = cache is not None and x.shape[1] == 1
+    tail = cache[1] if cache is not None else None
+    xbc, new_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], tail)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :inner].reshape(x.shape[0], x.shape[1], nh, ssm.head_dim)
+    bm = xbc[..., inner: inner + N]
+    cm = xbc[..., inner + N:]
+
+    new_cache = None
+    if decode:
+        y, new_state = ssd_decode_step(
+            xs[:, 0], dt[:, 0], a, bm[:, 0], cm[:, 0], dsk, cache[0])
+        y = y[:, None]
+        new_cache = (new_state, new_tail)
+    else:
+        from repro.kernels import ops as K  # local import: no cycle at load
+        init = cache[0] if cache is not None else None
+        chunk = min(ssm.chunk_size, x.shape[1])
+        if x.shape[1] % chunk:
+            chunk = x.shape[1]  # fall back to one chunk for odd small seqs
+        y, final = K.ssd(xs, dt, a, bm, cm, dsk, chunk, init)
+        if cache is not None:
+            new_cache = (final, new_tail)
+
+    y = y.reshape(x.shape[0], x.shape[1], inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["out_norm"], cfg.norm_eps)
+    out = y @ p["w_out"]
+    return x + shard(out, "batch", None, "act_embed"), new_cache

@@ -1,0 +1,130 @@
+"""Continuous-batching instance engine with REAL JAX execution.
+
+One ``Engine`` is one serving instance (a Prefill, Decode or fused PD
+instance in EPD-Serve terms). It owns a slot-based decode batch and a KV
+cache; requests are prefillled one-at-a-time (batch 1) and inserted into a
+free slot, then all active slots decode in lock-step — the standard
+continuous-batching loop, scaled to CPU-sized configs for tests/examples.
+
+The EPD disaggregation layer (repro.core) drives one or more Engines: the
+Encode stage produces features into the MM Store, Prefill engines run
+``prefill_request`` and export their caches, Decode engines import caches
+via ``insert`` and run ``decode_step``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import frontend as FE
+from repro.models.transformer import make_caches
+from repro.serving.request import Request
+from repro.serving.steps import make_decode_fn, make_insert_fn, make_prefill_fn
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
+                 max_len: int = 128, temperature: float = 0.0,
+                 cache_dtype=jnp.float32, kv_dtype=None):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.cache_dtype = cache_dtype
+        self.kv_dtype = kv_dtype          # e.g. jnp.float8_e4m3fn (§Perf)
+        self._prefill = make_prefill_fn(cfg)
+        self._decode = make_decode_fn(cfg, temperature)
+        self._insert = make_insert_fn(cfg)
+        self.caches = make_caches(cfg, max_batch, max_len, dtype=cache_dtype,
+                                  kv_dtype=kv_dtype)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self._last_tok = np.zeros((max_batch,), np.int32)
+        self._key = jax.random.PRNGKey(0)
+
+    # -- capacity ------------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots) if r is None]
+
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self.slots)
+
+    # -- stages --------------------------------------------------------------
+    def prefill_request(self, req: Request, mm_embeds=None,
+                        enc_frames=None) -> Tuple[int, Dict[str, Any]]:
+        """Run Prefill for one request (batch=1). Returns (first_token,
+        prefilled_caches) — the caches are the P->D payload."""
+        cfg = self.cfg
+        n_mm = 0
+        if mm_embeds is not None and cfg.encoder is None:
+            n_mm = mm_embeds.shape[1]
+        toks = np.asarray(req.prompt_tokens, np.int32)[None]
+        pad = self.max_len - n_mm - toks.shape[1]
+        if pad < 0:
+            raise ValueError(
+                f"prompt ({toks.shape[1]}+{n_mm}) exceeds max_len {self.max_len}")
+        toks = np.pad(toks, ((0, 0), (0, pad)))
+        lengths = jnp.asarray([len(req.prompt_tokens) + n_mm], jnp.int32)
+        caches = make_caches(cfg, 1, self.max_len, dtype=self.cache_dtype,
+                             kv_dtype=self.kv_dtype)
+        logits, caches = self._prefill(self.params, jnp.asarray(toks),
+                                       lengths, caches, mm_embeds, enc_frames)
+        first = int(jnp.argmax(logits[0]))
+        return first, caches
+
+    def insert(self, req: Request, prefilled_caches, first_token: int) -> int:
+        """Attach a prefilled request to a free decode slot (P->D import)."""
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError("no free decode slot")
+        slot = free[0]
+        self.caches = self._insert(prefilled_caches, self.caches, slot)
+        self.slots[slot] = req
+        self._last_tok[slot] = first_token
+        req.output_tokens.append(first_token)
+        return slot
+
+    def decode_step(self) -> List[Tuple[Request, int, bool]]:
+        """One lock-step decode over all slots. Returns (req, token, done)
+        for every ACTIVE slot (inactive slots compute but are ignored)."""
+        self._key, sub = jax.random.split(self._key)
+        toks, self.caches = self._decode(
+            self.params, jnp.asarray(self._last_tok), self.caches, sub)
+        toks = np.asarray(toks)
+        out = []
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            t = int(toks[i])
+            self._last_tok[i] = t
+            req.output_tokens.append(t)
+            done = (t == req.eos_token or
+                    len(req.output_tokens) >= req.max_new_tokens or
+                    int(np.asarray(self.caches["len"][i])) >= self.max_len - 1)
+            if done:
+                self.slots[i] = None
+            out.append((req, t, done))
+        return out
+
+    # -- monolithic convenience (the vLLM-style baseline) ---------------------
+    def run_request(self, req: Request) -> List[int]:
+        """Serial E->P->D for one request on this single engine."""
+        mm = None
+        enc = None
+        cfg = self.cfg
+        if req.is_multimodal and cfg.frontend is not None:
+            feats = FE.stub_embeddings(cfg, req.mm_payload,
+                                       req.mm_tokens or None)
+            if cfg.encoder is not None:
+                enc = feats[None]
+            else:
+                mm = feats[None]
+        first, caches = self.prefill_request(req, mm, enc)
+        self.insert(req, caches, first)
+        while any(s is req for s in self.slots):
+            self.decode_step()
+        return req.output_tokens

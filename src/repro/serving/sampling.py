@@ -1,0 +1,12 @@
+"""Token sampling."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits, key=None, temperature: float = 0.0):
+    """logits: (B, vocab) f32 -> (B,) int32."""
+    if temperature <= 0.0 or key is None:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)

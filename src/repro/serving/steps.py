@@ -1,0 +1,61 @@
+"""Jitted per-instance step functions: encode / prefill / decode / insert.
+
+These are the *real-compute* building blocks used by the serving engine
+(CPU-scale configs) and by the dry-run (full-scale configs lowered on the
+production meshes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import decode_forward, prefill_forward
+from repro.serving.sampling import sample
+
+
+def make_prefill_fn(cfg: ModelConfig):
+    @jax.jit
+    def prefill_fn(params, tokens, lengths, caches, mm_embeds=None,
+                   enc_frames=None):
+        logits, new_caches = prefill_forward(
+            params, cfg, tokens, caches, lengths=lengths,
+            mm_embeds=mm_embeds, enc_frames=enc_frames)
+        return logits, new_caches
+
+    return prefill_fn
+
+
+def make_decode_fn(cfg: ModelConfig, temperature: float = 0.0):
+    @functools.partial(jax.jit, donate_argnums=(2,))
+    def decode_fn(params, tokens, caches, key):
+        logits, new_caches = decode_forward(params, cfg, tokens, caches)
+        next_tok = sample(logits, key, temperature)
+        return next_tok, new_caches
+
+    return decode_fn
+
+
+def make_insert_fn(cfg: ModelConfig):
+    """Copy one request's prefilled cache (batch=1) into batch slot `slot`
+    of the decode cache — the P->D handoff on the Decode instance."""
+
+    @functools.partial(jax.jit, donate_argnums=(1,), static_argnums=(2,))
+    def insert_fn(src_caches, dst_caches, slot: int):
+        def ins(dst, src):
+            if dst.ndim == 1:                       # lengths (B,)
+                return dst.at[slot].set(src[0])
+            # stacked caches: (R, B, ...) — batch axis 1
+            if src.ndim >= 3 and src.shape[2] != dst.shape[2]:
+                cfgpad = [(0, 0)] * src.ndim
+                cfgpad[2] = (0, dst.shape[2] - src.shape[2])
+                fill = -1 if src.dtype == jnp.int32 else 0
+                src = jnp.pad(src, cfgpad, constant_values=fill)
+            return dst.at[:, slot].set(src[:, 0].astype(dst.dtype))
+
+        return jax.tree.map(ins, dst_caches, src_caches)
+
+    return insert_fn

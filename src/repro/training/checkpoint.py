@@ -1,0 +1,116 @@
+"""Checkpointing: save/restore params + optimizer state + step metadata.
+
+Plain-numpy ``.npz`` per pytree (no orbax dependency), with a manifest
+that records the flattened tree structure and a config fingerprint so a
+restore into the wrong architecture fails loudly. Works for any pytree of
+arrays (params, AdamWState, caches) and keeps the last ``keep`` steps.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import re
+import shutil
+from pathlib import Path
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.training.optimizer import AdamWState
+
+_MANIFEST = "manifest.json"
+
+
+def _fingerprint(cfg: ModelConfig) -> str:
+    key = (f"{cfg.name}|{cfg.n_layers}|{cfg.d_model}|{cfg.n_heads}|"
+           f"{cfg.n_kv_heads}|{cfg.d_ff}|{cfg.vocab}")
+    return hashlib.sha256(key.encode()).hexdigest()[:16]
+
+
+def _flatten(tree) -> Tuple[list, Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(ckpt_dir, cfg: ModelConfig, params, opt_state=None,
+                    step: int = 0, keep: int = 3) -> Path:
+    """Write checkpoint step; returns its directory."""
+    root = Path(ckpt_dir)
+    out = root / f"step_{step:08d}"
+    out.mkdir(parents=True, exist_ok=True)
+
+    def dump(name, tree):
+        leaves, _ = _flatten(tree)
+        np.savez(out / f"{name}.npz",
+                 **{f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)})
+
+    dump("params", params)
+    manifest = {
+        "step": step,
+        "fingerprint": _fingerprint(cfg),
+        "arch": cfg.name,
+        "has_opt": opt_state is not None,
+    }
+    if opt_state is not None:
+        dump("opt_mu", opt_state.mu)
+        dump("opt_nu", opt_state.nu)
+        manifest["opt_step"] = int(opt_state.step)
+    (out / _MANIFEST).write_text(json.dumps(manifest))
+
+    # retention
+    steps = sorted(p for p in root.glob("step_*") if p.is_dir())
+    for old in steps[:-keep]:
+        shutil.rmtree(old)
+    return out
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    root = Path(ckpt_dir)
+    best = None
+    for p in root.glob("step_*"):
+        m = re.match(r"step_(\d+)", p.name)
+        if m:
+            s = int(m.group(1))
+            best = s if best is None else max(best, s)
+    return best
+
+
+def restore_checkpoint(ckpt_dir, cfg: ModelConfig, params_like,
+                       opt_state_like=None, step: Optional[int] = None):
+    """Restore into the structure of ``params_like`` (shape/dtype checked).
+
+    Returns (params, opt_state_or_None, step).
+    """
+    root = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {root}")
+    src = root / f"step_{step:08d}"
+    manifest = json.loads((src / _MANIFEST).read_text())
+    if manifest["fingerprint"] != _fingerprint(cfg):
+        raise ValueError(
+            f"checkpoint is for arch {manifest['arch']!r}, not {cfg.name!r}")
+
+    def load(name, like):
+        leaves, treedef = _flatten(like)
+        with np.load(src / f"{name}.npz") as z:
+            new = []
+            for i, ref in enumerate(leaves):
+                arr = z[f"leaf_{i}"]
+                if tuple(arr.shape) != tuple(ref.shape):
+                    raise ValueError(
+                        f"{name} leaf {i}: shape {arr.shape} != {ref.shape}")
+                new.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+        return jax.tree.unflatten(treedef, new)
+
+    params = load("params", params_like)
+    opt_state = None
+    if opt_state_like is not None and manifest.get("has_opt"):
+        opt_state = AdamWState(
+            jax.numpy.asarray(manifest["opt_step"], jax.numpy.int32),
+            load("opt_mu", opt_state_like.mu),
+            load("opt_nu", opt_state_like.nu))
+    return params, opt_state, step

@@ -1,0 +1,83 @@
+"""Training step + loop (substrate for the train_4k input shape)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import train_forward
+from repro.training.optimizer import AdamW, AdamWState
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamW, remat: bool = True,
+                    num_microbatches: int = 1, loss_chunk: int = 0,
+                    grad_specs=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). jit/pjit-able; used both for real CPU training and for the
+    dry-run lowering at full scale.
+
+    num_microbatches > 1 enables gradient accumulation (scan over
+    microbatches) — required at global_batch=256 x 4k so the per-micro
+    vocab logits stay within per-chip HBM.
+    grad_specs: optional PartitionSpec pytree matching params — constrains
+    the gradient accumulator so XLA reduce-scatters per-micro grads onto
+    the ZeRO shards instead of all-reducing full-size gradients.
+    """
+    def _constrain(tree):
+        if grad_specs is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            grad_specs)
+
+    def loss_fn(params, batch):
+        total, metrics = train_forward(params, cfg, batch, remat=remat,
+                                       loss_chunk=loss_chunk)
+        return total, metrics
+
+    def train_step(params, opt_state: AdamWState, batch: Dict[str, Any]):
+        if num_microbatches <= 1:
+            (_, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            n = num_microbatches
+            micro = jax.tree.map(
+                lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]),
+                batch)
+
+            def acc(carry, mb):
+                g_sum, l_sum, a_sum = carry
+                (_, m), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                g = _constrain(g)
+                g_sum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_sum, g)
+                return (_constrain(g_sum), l_sum + m["loss"],
+                        a_sum + m["aux"]), None
+
+            zeros = _constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (g_sum, l_sum, a_sum), _ = jax.lax.scan(
+                acc, (zeros, jnp.zeros(()), jnp.zeros(())), micro)
+            grads = jax.tree.map(lambda g: g / n, g_sum)
+            metrics = {"loss": l_sum / n, "aux": a_sum / n}
+        new_params, new_state = opt.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def train_loop(cfg: ModelConfig, params, batches, *, opt: Optional[AdamW] = None,
+               remat: bool = False):
+    """Simple CPU-scale training loop over an iterable of batches."""
+    opt = opt or AdamW()
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt, remat=remat))
+    losses = []
+    for batch in batches:
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+    return params, opt_state, losses

@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Tests run on the single CPU device (the dry-run sets its own
+# XLA_FLAGS in-process; see src/repro/launch/dryrun.py).
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

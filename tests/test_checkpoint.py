@@ -1,0 +1,72 @@
+"""Checkpoint save/restore round-trips + safety checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.model import init_params
+from repro.training.checkpoint import (latest_step, restore_checkpoint,
+                                       save_checkpoint)
+from repro.training.data import synthetic_batches
+from repro.training.optimizer import AdamW
+from repro.training.train import make_train_step
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("smollm-135m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = AdamW(lr=1e-3, warmup_steps=1)
+    return cfg, params, opt
+
+
+def test_roundtrip_exact(tmp_path, setup):
+    cfg, params, opt = setup
+    state = opt.init(params)
+    save_checkpoint(tmp_path, cfg, params, state, step=7)
+    p2, s2, step = restore_checkpoint(tmp_path, cfg, params, state)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(state.mu), jax.tree.leaves(s2.mu)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_training_resumes_identically(tmp_path, setup):
+    """train 2 steps == train 1, checkpoint, restore, train 1."""
+    cfg, params, opt = setup
+    step_fn = jax.jit(make_train_step(cfg, opt, remat=False))
+    batches = list(synthetic_batches(cfg, 4, 16, 2, seed=9))
+
+    pA, sA = params, opt.init(params)
+    for b in batches:
+        pA, sA, _ = step_fn(pA, sA, b)
+
+    pB, sB = params, opt.init(params)
+    pB, sB, _ = step_fn(pB, sB, batches[0])
+    save_checkpoint(tmp_path, cfg, pB, sB, step=1)
+    pB, sB, _ = restore_checkpoint(tmp_path, cfg, pB, sB)
+    pB, sB, _ = step_fn(pB, sB, batches[1])
+
+    for a, b in zip(jax.tree.leaves(pA), jax.tree.leaves(pB)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6, rtol=1e-5)
+
+
+def test_retention(tmp_path, setup):
+    cfg, params, opt = setup
+    for s in range(5):
+        save_checkpoint(tmp_path, cfg, params, None, step=s, keep=2)
+    assert latest_step(tmp_path) == 4
+    import pathlib
+    kept = sorted(p.name for p in pathlib.Path(tmp_path).glob("step_*"))
+    assert kept == ["step_00000003", "step_00000004"]
+
+
+def test_wrong_arch_rejected(tmp_path, setup):
+    cfg, params, opt = setup
+    save_checkpoint(tmp_path, cfg, params, None, step=0)
+    other = get_config("llama3.2-1b").reduced()
+    with pytest.raises(ValueError, match="arch"):
+        restore_checkpoint(tmp_path, other, params)

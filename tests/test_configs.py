@@ -1,0 +1,84 @@
+"""Config registry + parameter accounting."""
+import pytest
+
+from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, SHAPES, get_config
+
+EXPECTED_PARAMS_B = {
+    # name -> (total B, tolerance fraction) vs public figures
+    "glm4-9b": (9.4, 0.15),
+    "llama4-scout-17b-a16e": (109.0, 0.15),
+    "jamba-v0.1-52b": (52.0, 0.15),
+    "deepseek-7b": (6.9, 0.15),
+    "llama3.2-1b": (1.24, 0.15),
+    "whisper-base": (0.074, 0.25),
+    "mamba2-370m": (0.37, 0.20),
+    "llava-next-mistral-7b": (7.25, 0.15),
+    "smollm-135m": (0.135, 0.15),
+    "mixtral-8x7b": (46.7, 0.15),
+}
+
+
+def test_registry_complete():
+    assert len(ASSIGNED_ARCHS) == 10
+    assert "openpangu-7b-vl" in ALL_ARCHS           # the paper's own model
+    assert len(SHAPES) == 4
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_param_counts_match_public_figures(arch):
+    cfg = get_config(arch)
+    total = cfg.param_count() / 1e9
+    want, tol = EXPECTED_PARAMS_B[arch]
+    assert abs(total - want) / want < tol, f"{arch}: {total:.2f}B vs {want}B"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_exact_geometry(arch):
+    cfg = get_config(arch)
+    spec = {
+        "glm4-9b": (40, 4096, 32, 2, 13696, 151552),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+        "deepseek-7b": (30, 4096, 32, 32, 11008, 102400),
+        "llama3.2-1b": (16, 2048, 32, 8, 8192, 128256),
+        "whisper-base": (6, 512, 8, 8, 2048, 51865),
+        "mamba2-370m": (48, 1024, 0, 0, 0, 50280),
+        "llava-next-mistral-7b": (32, 4096, 32, 8, 14336, 32000),
+        "smollm-135m": (30, 576, 9, 3, 1536, 49152),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab)
+    assert got == spec
+
+
+def test_moe_specs():
+    assert get_config("mixtral-8x7b").moe.n_experts == 8
+    assert get_config("mixtral-8x7b").moe.top_k == 2
+    assert get_config("llama4-scout-17b-a16e").moe.top_k == 1
+    assert get_config("jamba-v0.1-52b").moe.n_experts == 16
+
+
+def test_jamba_interleave():
+    cfg = get_config("jamba-v0.1-52b")
+    mixers = [s.mixer for s in cfg.pattern]
+    assert mixers.count("attn") == 1 and mixers.count("ssm") == 7
+    ffns = [s.ffn for s in cfg.pattern]
+    assert ffns.count("moe") == 4           # every other layer
+
+
+def test_sub_quadratic_flags():
+    assert get_config("mamba2-370m").sub_quadratic
+    assert get_config("jamba-v0.1-52b").sub_quadratic
+    assert get_config("mixtral-8x7b").sub_quadratic     # SWA
+    assert not get_config("glm4-9b").sub_quadratic
+    assert not get_config("whisper-base").sub_quadratic
+
+
+def test_reduced_configs_are_small():
+    for arch in ASSIGNED_ARCHS:
+        r = get_config(arch).reduced()
+        assert r.d_model <= 512
+        assert r.n_layers <= max(2 * len(r.pattern), len(r.pattern))
+        if r.moe:
+            assert r.moe.n_experts <= 4

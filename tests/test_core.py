@@ -1,0 +1,226 @@
+"""Unit tests for the EPD-Serve core: MM Store, KV transfer planner,
+deployments, scheduler, co-location model, cost model."""
+import pytest
+
+from repro.core.colocation import (STAGE_MIX, interference_heatmap,
+                                   stage_slowdown)
+from repro.core.costmodel import RDMA, V5E, CostModel
+from repro.core.deployment import PAPER_DEPLOYMENTS, parse, scale
+from repro.core.events import EventLoop
+from repro.core.kv_transfer import choose_group_size, plan
+from repro.core.mm_store import MMStore
+from repro.core.scheduler import Router
+from repro.configs import get_config
+from repro.serving.request import Request
+
+
+# ---------------------------------------------------------------------------
+# events
+# ---------------------------------------------------------------------------
+
+def test_event_loop_ordering():
+    loop = EventLoop()
+    seen = []
+    loop.at(2.0, lambda: seen.append("b"))
+    loop.at(1.0, lambda: seen.append("a"))
+    loop.after(3.0, lambda: seen.append("c"))
+    loop.run()
+    assert seen == ["a", "b", "c"]
+    assert loop.now == 3.0
+
+
+# ---------------------------------------------------------------------------
+# MM store
+# ---------------------------------------------------------------------------
+
+def test_mm_store_dedup_and_hits():
+    s = MMStore()
+    s.put("k1", "v1", 100)
+    s.put("k1", "v1", 100)               # dedup
+    assert s.stats.dedup_puts == 1
+    assert s.get("k1") == "v1"
+    assert s.get("nope") is None
+    assert s.stats.hits == 1 and s.stats.misses == 1
+    assert 0.0 < s.stats.hit_rate < 1.0
+
+
+def test_mm_store_lru_eviction():
+    s = MMStore(capacity_bytes=250)
+    s.put("a", 1, 100)
+    s.put("b", 2, 100)
+    s.get("a")                            # refresh a
+    s.put("c", 3, 100)                    # evicts b (LRU)
+    assert s.contains("a") and s.contains("c")
+    assert not s.contains("b")
+    assert s.stats.evictions == 1
+    assert s.stats.bytes_stored <= 250
+
+
+def test_mm_store_fault_injection():
+    s = MMStore()
+    s.put("k", "v", 10)
+    s.inject_fault("k")
+    assert s.get("k") is None             # one faulted read
+    assert s.get("k") == "v"              # subsequent reads recover
+    assert s.stats.faults_injected == 1
+
+
+# ---------------------------------------------------------------------------
+# KV transfer planner (paper §3.3)
+# ---------------------------------------------------------------------------
+
+PLAN_KW = dict(n_layers=32, bytes_per_layer=9e9 / 32,
+               per_layer_compute=6.8 / 32, handshake=13e-3, link_bw=12.5e9)
+
+
+def test_kv_plan_schemes_ordering():
+    one = plan("one_shot", **PLAN_KW)
+    lw = plan("layer_wise", **PLAN_KW)
+    gr = plan("grouped", **PLAN_KW)
+    # grouped hides almost everything; layer-wise partially; one-shot nothing
+    assert gr.overlap_ratio > 0.95
+    assert one.overlap_ratio == 0.0
+    assert lw.overlap_ratio < gr.overlap_ratio
+    # grouped finishes earliest end-to-end
+    assert gr.total_done <= lw.total_done
+    assert gr.total_done <= one.total_done
+    # grouped bandwidth >= layer-wise (handshake amortization)
+    assert gr.effective_bandwidth >= lw.effective_bandwidth
+
+
+def test_kv_plan_layer_coverage():
+    for scheme in ("one_shot", "layer_wise", "grouped"):
+        p = plan(scheme, **PLAN_KW)
+        covered = sorted((g.start, g.end) for g in p.groups)
+        # contiguous cover of [0, 32)
+        assert covered[0][0] == 0 and covered[-1][1] == 32
+        for (s1, e1), (s2, e2) in zip(covered, covered[1:]):
+            assert e1 == s2
+        # payload conserved
+        assert sum(g.nbytes for g in p.groups) == pytest.approx(9e9)
+
+
+def test_kv_plan_blocking_handshake_stretches_prefill():
+    lw = plan("layer_wise", **PLAN_KW)
+    assert lw.prefill_end > lw.prefill_time
+    gr = plan("grouped", **PLAN_KW)
+    assert gr.prefill_end == gr.prefill_time
+
+
+def test_choose_group_size_regimes():
+    # compute-bound: handshake must hide inside a group's compute
+    g = choose_group_size(32, per_layer_compute=0.2, handshake=0.5,
+                          per_layer_transfer=0.01)
+    assert g >= 3
+    # wire-bound: amortize handshake
+    g2 = choose_group_size(32, per_layer_compute=0.001, handshake=0.05,
+                           per_layer_transfer=0.01)
+    assert g2 > 1
+
+
+# ---------------------------------------------------------------------------
+# deployments
+# ---------------------------------------------------------------------------
+
+def test_parse_deployments():
+    for name in PAPER_DEPLOYMENTS:
+        dep = parse(name)
+        stages = set()
+        for i in dep.instances:
+            stages.update(i.stages)
+        assert stages == {"E", "P", "D"}, name
+
+    assert parse("TP1").n_chips == 1
+    assert parse("TP2").n_chips == 2
+    assert parse("TP2").instances[0].tp == 2
+    assert parse("E-P-D").n_chips == 3
+    assert parse("(E-PD)").n_chips == 1
+    assert parse("(E-P)-D").n_chips == 2
+    ep_d = parse("EP-D")
+    assert ep_d.instances[0].monolithic
+    assert not parse("(E-P)-D").instances[0].monolithic
+    colo = parse("(E-D)-P")
+    assert colo.instances[0].coloc_group == colo.instances[1].coloc_group >= 0
+    assert colo.instances[2].coloc_group == -1
+
+
+def test_scale_replicas():
+    dep = scale(parse("(E-P)-D"), 2)
+    assert dep.n_chips == 4
+    assert len(dep.instances) == 6
+    groups = {i.coloc_group for i in dep.instances if i.coloc_group >= 0}
+    assert len(groups) == 2               # each replica its own chip
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+def test_router_multipath():
+    r = Router(parse("E-P-D"))
+    mm = Request(prompt_tokens=[1], mm_payload=b"x", mm_tokens=10)
+    txt = Request(prompt_tokens=[1])
+    assert r.path(mm) == ["E", "P", "D"]
+    assert r.path(txt) == ["P", "D"]
+
+
+def test_router_least_loaded():
+    dep = scale(parse("E-P-D"), 2)
+    r = Router(dep)
+    names = [i.name for i in dep.stage_instances("P")]
+    r.on_busy_until(names[0], 5.0)
+    picked = r.pick("P", now=0.0)
+    assert picked.spec.name == names[1]
+    # prefer pins affinity
+    assert r.pick("P", now=0.0, prefer=names[0]).spec.name == names[0]
+
+
+# ---------------------------------------------------------------------------
+# co-location interference (paper Fig. 6 structure)
+# ---------------------------------------------------------------------------
+
+def test_interference_structure():
+    h = interference_heatmap()
+    # like-with-like worst; complementary mild
+    assert h[("P", "P")] > h[("P", "D")]
+    assert h[("D", "D")] > h[("D", "E")]
+    assert h[("E", "P")] > h[("E", "D")]
+    for k, v in h.items():
+        assert v >= 1.0
+    # no concurrent stage => no slowdown
+    assert stage_slowdown("P", []) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+def test_cost_model_monotonic():
+    cm = CostModel(get_config("openpangu-7b-vl"))
+    assert cm.prefill_time(2048) > cm.prefill_time(256)
+    assert cm.encode_time(2000) > cm.encode_time(100)
+    assert cm.decode_step_time(64, 1000) > cm.decode_step_time(1, 1000)
+    # decode is memory-bound: time ~ flat in batch until compute kicks in
+    assert cm.decode_step_time(2, 500) < 2 * cm.decode_step_time(1, 500)
+    # TP penalty: TP2 on 2 chips is less than 2x faster
+    assert cm.prefill_time(2048, chips=2, tp=2) > \
+        cm.prefill_time(2048, chips=2, tp=1) / 1.0 * 0.5
+    # sliding window caps decode KV traffic
+    mx = CostModel(get_config("mixtral-8x7b"))
+    assert mx.decode_step_time(1, 100_000) == \
+        pytest.approx(mx.decode_step_time(1, mx.cfg.sliding_window), rel=1e-6)
+
+
+def test_paper_table3_shape():
+    """E-P overlap is ~100% at mainstream resolutions, <100% only at 4K."""
+    cm = CostModel(get_config("openpangu-7b-vl"))
+    from repro.models.frontend import PAPER_RESOLUTION_TOKENS
+    for res, n in PAPER_RESOLUTION_TOKENS.items():
+        nb = cm.feature_bytes(n)
+        tx = cm.feature_transfer_time(nb)
+        sc = cm.dispatch_latency(nb)
+        ratio = min(tx, sc) / tx
+        if n < 10_000:
+            assert ratio == 1.0, res
+        else:
+            assert 0.98 < ratio < 1.0, res

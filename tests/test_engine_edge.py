@@ -1,0 +1,76 @@
+"""Edge cases: engine capacity, enc-dec serving, simulator breakdown."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core.cluster import EPDCluster
+from repro.core.simulator import SHAREGPT_4O, simulate
+from repro.models.model import init_params
+from repro.serving.engine import Engine
+from repro.serving.request import Request
+
+
+def test_whisper_epd_serving():
+    """Enc-dec (audio) arch through the full disaggregated pipeline."""
+    cfg = get_config("whisper-base").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    cluster = EPDCluster(cfg, params, max_batch=2, max_len=48)
+    reqs = [Request(prompt_tokens=[1, 2, 3], max_new_tokens=4,
+                    mm_payload=b"audio-%d" % i, mm_tokens=0)
+            for i in range(2)]
+    for r in reqs:
+        cluster.submit(r)
+    done = cluster.run_until_done()
+    assert len(done) == 2
+    assert all(len(r.output_tokens) == 4 for r in done)
+
+
+def test_engine_slot_reuse():
+    """Slots free on completion and are reusable for new requests."""
+    cfg = get_config("smollm-135m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_batch=2, max_len=48)
+    for wave in range(3):
+        reqs = [Request(prompt_tokens=[5 + wave, 6, 7], max_new_tokens=3)
+                for _ in range(2)]
+        for r in reqs:
+            first, caches = eng.prefill_request(r)
+            eng.insert(r, caches, first)
+        while eng.n_active:
+            eng.decode_step()
+        assert all(len(r.output_tokens) == 3 for r in reqs)
+    assert eng.free_slots() == [0, 1]
+
+
+def test_engine_rejects_overlong_prompt():
+    cfg = get_config("smollm-135m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_batch=1, max_len=16)
+    with pytest.raises(ValueError, match="exceeds"):
+        eng.prefill_request(Request(prompt_tokens=list(range(40))))
+
+
+def test_simulator_stage_breakdown_consistency():
+    m = simulate(get_config("openpangu-7b-vl"), "E-P-D", SHAREGPT_4O,
+                 rate=4.0, n_requests=96, seed=4)
+    b = m.stage_breakdown_ms()
+    # decomposition covers TTFT: queue + encode + dispatch + prefill ~ TTFT
+    total = b["encode_queue"] + b["encode"] + b["dispatch"] + b["prefill"]
+    assert total == pytest.approx(m.mean_ttft_ms, rel=0.02)
+    for v in b.values():
+        assert v >= 0.0
+
+
+def test_simulator_replicas_balance_load():
+    """2 replicas at 2x the rate should roughly match 1 replica at 1x."""
+    model = get_config("openpangu-7b-vl")
+    one = simulate(model, "(E-P)-D", SHAREGPT_4O, rate=3.0,
+                   n_requests=128, seed=6)
+    two = simulate(model, "(E-P)-D", SHAREGPT_4O, rate=6.0,
+                   n_requests=128, seed=6, replicas=2)
+    assert two.n_chips == 2 * one.n_chips
+    # per-chip throughput comparable (within queueing noise)
+    t1 = one.throughput_tok_s / one.n_chips
+    t2 = two.throughput_tok_s / two.n_chips
+    assert t2 == pytest.approx(t1, rel=0.25)

@@ -1,0 +1,155 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import (decode_attention,
+                                            decode_attention_ref)
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.ssd_scan import ssd_ref, ssd_scan, ssd_sequential
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=3e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # b, s, S, nq, nkv, hd, window, causal
+    (2, 64, 64, 4, 2, 64, None, True),
+    (1, 100, 100, 8, 8, 32, None, True),       # MHA, ragged seq
+    (2, 128, 128, 4, 1, 64, 32, True),         # MQA + sliding window
+    (1, 50, 70, 4, 2, 64, None, False),        # cross attention
+    (1, 33, 33, 2, 2, 128, 16, True),          # odd seq, window
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(case, dtype):
+    b, s, S, nq, nkv, hd, win, causal = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, nq, hd), dtype)
+    k = jax.random.normal(ks[1], (b, S, nkv, hd), dtype)
+    v = jax.random.normal(ks[2], (b, S, nkv, hd), dtype)
+    qp = jnp.broadcast_to(jnp.arange(s), (b, s))
+    qp = jnp.where(qp < s - 3, qp, -1)          # padded queries
+    kp = jnp.broadcast_to(jnp.arange(S), (b, S))
+    out = flash_attention(q, k, v, qp, kp, window=win, causal=causal,
+                          block_q=32, block_k=32)
+    ref = attention_ref(q, k, v, qp, kp, window=win, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        **_tol(dtype))
+
+
+def test_attention_ref_chunked_equals_dense():
+    """The q-chunked long-seq path must equal the dense path."""
+    from repro.kernels.flash_attention import ref as R
+    b, s, nq, nkv, hd = 1, 64, 4, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, nq, hd))
+    k = jax.random.normal(ks[1], (b, s, nkv, hd))
+    v = jax.random.normal(ks[2], (b, s, nkv, hd))
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    dense = R._attention_dense(q, k, v, pos, pos, None, True)
+    old_thr, old_chunk = R._CHUNK_THRESHOLD, R._Q_CHUNK
+    try:
+        R._CHUNK_THRESHOLD, R._Q_CHUNK = 16, 16
+        chunked = R.attention_ref(q, k, v, pos, pos)
+    finally:
+        R._CHUNK_THRESHOLD, R._Q_CHUNK = old_thr, old_chunk
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(dense),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+DECODE_CASES = [
+    (2, 64, 4, 2, 64, None),
+    (1, 100, 8, 1, 32, None),                   # MQA, ragged cache
+    (2, 48, 4, 4, 64, 16),                      # MHA + window
+    (3, 37, 6, 2, 128, None),                   # odd sizes
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_matches_ref(case, dtype):
+    b, S, nq, nkv, hd, win = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, nq, hd), dtype)
+    k = jax.random.normal(ks[1], (b, S, nkv, hd), dtype)
+    v = jax.random.normal(ks[2], (b, S, nkv, hd), dtype)
+    kp = jnp.broadcast_to(jnp.arange(S), (b, S))
+    kp = jnp.where(kp < S - 5, kp, -1)           # empty ring slots
+    qp = jnp.array([S - 6] * b)
+    out = decode_attention(q, k, v, qp, kp, window=win, block_k=32)
+    ref = decode_attention_ref(q, k, v, qp, kp, window=win)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    (2, 64, 4, 32, 16, 16),
+    (1, 128, 2, 64, 128, 32),
+    (2, 96, 3, 32, 64, 32),
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_kernel_matches_sequential(case):
+    B, S, H, P, N, chunk = case
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    bm = jax.random.normal(ks[3], (B, S, N)) * 0.3
+    cm = jax.random.normal(ks[4], (B, S, N)) * 0.3
+    dsk = jnp.ones((H,))
+    s0 = jax.random.normal(ks[5], (B, H, P, N)) * 0.1
+    yk, fk = ssd_scan(x, dt, a, bm, cm, dsk, chunk, s0)
+    yr, fr = ssd_ref(x, dt, a, bm, cm, dsk, chunk, s0)
+    ys, fs = ssd_sequential(x, dt, a, bm, cm, dsk, s0)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(ys),
+                               atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(fk), np.asarray(fs),
+                               atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(yr), np.asarray(ys),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_ssd_decode_step_continues_scan():
+    """Chunked scan state + single-token updates == longer scan."""
+    from repro.models.ssm import ssd_decode_step
+    B, S, H, P, N = 1, 32, 2, 16, 8
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S + 1, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S + 1, H)))
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    bm = jax.random.normal(ks[3], (B, S + 1, N)) * 0.3
+    cm = jax.random.normal(ks[4], (B, S + 1, N)) * 0.3
+    dsk = jnp.ones((H,))
+    y_full, f_full = ssd_sequential(x, dt, a, bm, cm, dsk)
+    _, f_prefix = ssd_ref(x[:, :S], dt[:, :S], a, bm[:, :S], cm[:, :S],
+                          dsk, 16)
+    y_step, f_step = ssd_decode_step(x[:, S], dt[:, S], a, bm[:, S],
+                                     cm[:, S], dsk, f_prefix)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_full[:, S]),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(f_step), np.asarray(f_full),
+                               atol=1e-4, rtol=1e-4)

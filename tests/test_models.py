@@ -1,0 +1,168 @@
+"""Per-architecture smoke tests + cache-semantics correctness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models.model import (decode_forward, init_params, prefill_forward,
+                                train_forward)
+from repro.models.params import count_params
+from repro.models.transformer import make_caches
+from repro.training.optimizer import AdamW
+from repro.training.train import make_train_step
+
+
+def _mk(arch, dropless=False):
+    cfg = get_config(arch).reduced()
+    if dropless and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _batch(cfg, b=2, s=16, key=None):
+    key = key or jax.random.PRNGKey(1)
+    batch = {
+        "tokens": jax.random.randint(key, (b, s), 0, cfg.vocab),
+        "labels": jax.random.randint(key, (b, s), 0, cfg.vocab),
+    }
+    if cfg.frontend is not None and cfg.encoder is None:
+        batch["mm_embeds"] = jnp.full((b, 4, cfg.frontend.feature_dim), 0.01)
+    if cfg.encoder is not None:
+        batch["enc_frames"] = jnp.full(
+            (b, cfg.encoder.n_ctx, cfg.frontend.feature_dim), 0.01)
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# (f) REDUCED-config smoke tests: one forward + one train step per arch
+# ---------------------------------------------------------------------------
+
+SMOKE_ARCHS = ASSIGNED_ARCHS + ("openpangu-7b-vl",)   # + the paper's model
+
+
+@pytest.mark.parametrize("arch", SMOKE_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg, params = _mk(arch)
+    assert count_params(params) < 20_000_000
+    batch = _batch(cfg)
+    loss, metrics = train_forward(params, cfg, batch, remat=False)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+
+    opt = AdamW(lr=1e-3)
+    step = jax.jit(make_train_step(cfg, opt, remat=False))
+    new_params, _, m = step(params, opt.init(params), batch)
+    assert bool(jnp.isfinite(m["loss"]))
+    # params actually changed
+    delta = sum(float(jnp.abs(a - b).sum()) for a, b in zip(
+        jax.tree.leaves(new_params), jax.tree.leaves(params)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", SMOKE_ARCHS)
+def test_smoke_serve_step(arch):
+    """prefill + one decode step: output shapes + no NaNs."""
+    cfg, params = _mk(arch)
+    b, s = 2, 12
+    batch = _batch(cfg, b, s)
+    caches = make_caches(cfg, b, 32, dtype=jnp.float32)
+    logits, caches = prefill_forward(
+        params, cfg, batch["tokens"], caches,
+        lengths=jnp.array([s + (4 if "mm_embeds" in batch else 0)] * b),
+        mm_embeds=batch.get("mm_embeds"), enc_frames=batch.get("enc_frames"))
+    assert logits.shape == (b, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    tok = jnp.argmax(logits, -1)
+    logits2, caches = decode_forward(params, cfg, tok, caches)
+    assert logits2.shape == (b, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits2)))
+
+
+# ---------------------------------------------------------------------------
+# cache semantics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "mixtral-8x7b",
+                                  "mamba2-370m", "jamba-v0.1-52b",
+                                  "whisper-base", "deepseek-7b"])
+def test_decode_matches_prefill(arch):
+    """Decoding token t against a cache prefilled to t-1 must equal
+    prefilling all t tokens (MoE archs: dropless capacity)."""
+    cfg, params = _mk(arch, dropless=True)
+    b, s = 2, 12
+    key = jax.random.PRNGKey(3)
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    ef = (jnp.full((b, cfg.encoder.n_ctx, cfg.frontend.feature_dim), 0.01)
+          if cfg.encoder else None)
+    cA = make_caches(cfg, b, 32, dtype=jnp.float32)
+    lA = jnp.array([s] * b)
+    logA, _ = prefill_forward(params, cfg, toks, cA, lengths=lA,
+                              enc_frames=ef)
+    cB = make_caches(cfg, b, 32, dtype=jnp.float32)
+    logB0, cB = prefill_forward(params, cfg, toks[:, :s - 1], cB,
+                                lengths=jnp.array([s - 1] * b), enc_frames=ef)
+    logB, _ = decode_forward(params, cfg, toks[:, s - 1], cB)
+    np.testing.assert_allclose(np.asarray(logA), np.asarray(logB),
+                               atol=2e-3, rtol=1e-3)
+
+
+def test_swa_ring_buffer_wraparound():
+    """Sliding-window decode with a window-sized ring buffer must equal
+    decode with an oversized (never-wrapping) cache."""
+    cfg, params = _mk("mixtral-8x7b", dropless=True)
+    cfg = dataclasses.replace(cfg, sliding_window=8)
+    b, prefill_len, n_decode = 1, 6, 10
+    key = jax.random.PRNGKey(5)
+    toks = jax.random.randint(key, (b, prefill_len + n_decode), 0, cfg.vocab)
+
+    def run(cache_len, for_decode):
+        caches = make_caches(cfg, b, cache_len, dtype=jnp.float32,
+                             for_decode=for_decode)
+        logits, caches = prefill_forward(
+            params, cfg, toks[:, :prefill_len], caches,
+            lengths=jnp.array([prefill_len] * b))
+        outs = []
+        for i in range(n_decode):
+            logits, caches = decode_forward(
+                params, cfg, toks[:, prefill_len + i], caches)
+            outs.append(logits)
+        return jnp.stack(outs)
+
+    big = run(64, for_decode=False)       # cache never wraps
+    ring = run(64, for_decode=True)       # window-sized ring buffer (8)
+    np.testing.assert_allclose(np.asarray(big), np.asarray(ring),
+                               atol=2e-3, rtol=1e-3)
+
+
+def test_padding_invariance():
+    """Prefill with right-padding must give the same last-token logits."""
+    cfg, params = _mk("smollm-135m")
+    b, s = 1, 10
+    toks = jax.random.randint(jax.random.PRNGKey(7), (b, s), 0, cfg.vocab)
+    c1 = make_caches(cfg, b, 32, dtype=jnp.float32)
+    l1, _ = prefill_forward(params, cfg, toks, c1, lengths=jnp.array([s]))
+    padded = jnp.pad(toks, ((0, 0), (0, 6)))
+    c2 = make_caches(cfg, b, 32, dtype=jnp.float32)
+    l2, _ = prefill_forward(params, cfg, padded, c2, lengths=jnp.array([s]))
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               atol=2e-4, rtol=1e-4)
+
+
+def test_mm_embeddings_change_output():
+    cfg, params = _mk("llava-next-mistral-7b")
+    b, s = 1, 8
+    toks = jax.random.randint(jax.random.PRNGKey(9), (b, s), 0, cfg.vocab)
+    mm1 = jnp.full((b, 4, cfg.frontend.feature_dim), 0.01)
+    mm2 = jnp.full((b, 4, cfg.frontend.feature_dim), -0.05)
+    outs = []
+    for mm in (mm1, mm2):
+        c = make_caches(cfg, b, 32, dtype=jnp.float32)
+        lg, _ = prefill_forward(params, cfg, toks, c,
+                                lengths=jnp.array([s + 4]), mm_embeds=mm)
+        outs.append(np.asarray(lg))
+    assert np.abs(outs[0] - outs[1]).max() > 1e-4

@@ -1,0 +1,122 @@
+"""EPD simulator: invariants + the paper's qualitative claims."""
+import dataclasses
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.simulator import (SHAREGPT_4O, VISUALWEB, SimConfig,
+                                  Simulator, gen_requests, simulate)
+
+MODEL = get_config("openpangu-7b-vl")
+
+
+def _run(dep, rate=6.0, n=192, **kw):
+    return simulate(MODEL, dep, SHAREGPT_4O, rate=rate, n_requests=n,
+                    seed=7, **kw)
+
+
+# ---------------------------------------------------------------------------
+# invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dep", ["TP1", "TP2", "E-PD", "(E-PD)", "EP-D",
+                                 "(E-P)-D", "(E-D)-P", "E-P-D"])
+def test_all_requests_complete_all_deployments(dep):
+    m = _run(dep, rate=4.0, n=96)
+    assert len(m.requests) == 96
+    for r in m.requests:
+        assert len(r.output_tokens) == r.max_new_tokens
+        assert r.t_first_token >= r.t_arrival
+        assert r.t_done >= r.t_first_token
+        assert r.ttft > 0 and r.tpot > 0
+
+
+def test_timestamps_monotone_through_pipeline():
+    m = _run("E-P-D", rate=4.0, n=96)
+    for r in m.requests:
+        if r.is_multimodal and r.t_encode_start >= 0:
+            assert r.t_arrival <= r.t_encode_start <= r.t_encode_done
+            assert r.t_encode_done <= r.t_prefill_start + 1e-9
+
+
+def test_text_only_requests_skip_encode():
+    ds = dataclasses.replace(VISUALWEB, mm_fraction=0.5)
+    m = simulate(MODEL, "E-P-D", ds, rate=4.0, n_requests=128, seed=3)
+    text = [r for r in m.requests if not r.is_multimodal]
+    assert text, "workload should contain text-only requests"
+    for r in text:
+        assert r.t_encode_start < 0          # never touched Encode
+
+
+def test_mm_store_dedup_reduces_encodes():
+    ds = dataclasses.replace(SHAREGPT_4O, unique_images=8)
+    m = simulate(MODEL, "E-P-D", ds, rate=4.0, n_requests=128, seed=3)
+    assert m.store_hit_rate > 0.5            # 128 reqs, 8 unique images
+
+
+# ---------------------------------------------------------------------------
+# paper claims (qualitative)
+# ---------------------------------------------------------------------------
+
+def test_decode_disaggregation_stabilizes_tpot():
+    """Paper §4.4: decode-disaggregated deployments have far lower TPOT
+    than monolithic under load."""
+    mono = _run("TP1", rate=8.0)
+    disagg = _run("(E-P)-D", rate=8.0)
+    assert disagg.mean_tpot_ms < mono.mean_tpot_ms / 2
+
+
+def test_ep_colocation_beats_coupled_ep():
+    """Paper §4.4: (E-P)-D (spatial multiplexing) beats EP-D (serial
+    coupling) on TTFT under load."""
+    coupled = _run("EP-D", rate=8.0)
+    coloc = _run("(E-P)-D", rate=8.0)
+    assert coloc.mean_ttft_ms < coupled.mean_ttft_ms
+
+
+def test_ed_colocation_best_ttft():
+    """Paper §4.7: (E-D)-P excels at TTFT (complementary co-location)."""
+    edp = _run("(E-D)-P", rate=8.0)
+    epd = _run("(E-P)-D", rate=8.0)
+    ep_d = _run("EP-D", rate=8.0)
+    assert edp.mean_ttft_ms <= epd.mean_ttft_ms
+    assert edp.mean_ttft_ms <= ep_d.mean_ttft_ms
+    # ...at slight TPOT cost vs the cleanest decode isolation
+    assert edp.mean_tpot_ms >= ep_d.mean_tpot_ms * 0.99
+
+
+def test_full_epd_highest_slo_under_load():
+    """Paper Table 5: E-P-D achieves the best SLO attainment at high load."""
+    rows = {d: _run(d, rate=8.0) for d in
+            ["TP1", "(E-PD)", "EP-D", "(E-P)-D", "E-P-D"]}
+    slo = {d: m.slo_attainment(2000, 50) for d, m in rows.items()}
+    assert slo["E-P-D"] >= max(slo.values()) - 1e-9
+    assert slo["E-P-D"] > slo["TP1"]
+    assert slo["(E-P)-D"] > slo["EP-D"] - 1e-9
+
+
+def test_transmission_optimizations_reduce_ttft():
+    """Paper Table 2: both mechanisms cut TTFT; combined cuts most."""
+    base = _run("E-P-D", rate=3.0, kv_scheme="layer_wise", ep_async=False)
+    ep = _run("E-P-D", rate=3.0, kv_scheme="layer_wise", ep_async=True)
+    kv = _run("E-P-D", rate=3.0, kv_scheme="grouped", ep_async=False)
+    both = _run("E-P-D", rate=3.0, kv_scheme="grouped", ep_async=True)
+    assert ep.mean_ttft_ms < base.mean_ttft_ms
+    assert kv.mean_ttft_ms < base.mean_ttft_ms
+    # combined is best up to queueing noise (stochastic arrival ordering)
+    assert both.mean_ttft_ms < min(ep.mean_ttft_ms, kv.mean_ttft_ms) * 1.02
+    assert both.mean_ttft_ms < base.mean_ttft_ms * 0.85
+
+
+def test_per_chip_normalization():
+    m1 = _run("E-P-D", rate=4.0, n=96)
+    assert m1.n_chips == 3
+    eff_total = m1.effective_throughput(2000, 50, per_chip=False)
+    eff_chip = m1.effective_throughput(2000, 50, per_chip=True)
+    assert eff_chip == pytest.approx(eff_total / 3)
+
+
+def test_gen_requests_poisson_rate():
+    reqs = gen_requests(SHAREGPT_4O, 2000, rate=10.0, seed=0)
+    span = reqs[-1].t_arrival - reqs[0].t_arrival
+    assert 2000 / span == pytest.approx(10.0, rel=0.15)

@@ -1,0 +1,69 @@
+"""End-to-end behaviour of the EPD-Serve system (real compute + simulator).
+
+The headline checks: a multimodal request stream served through the
+disaggregated E->P->D pipeline produces exactly the monolithic engine's
+tokens, and the simulator reproduces the paper's headline effect —
+EPD disaggregation with co-location beats PD-style deployments on
+effective throughput under SLO.
+"""
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core.cluster import EPDCluster
+from repro.core.simulator import SHAREGPT_4O, simulate
+from repro.models.model import init_params
+from repro.serving.engine import Engine
+from repro.serving.request import Request
+
+
+def test_disaggregation_is_transparent_to_outputs():
+    """Tokens must not depend on the serving topology."""
+    cfg = get_config("smollm-135m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    prompts = [[3, 1, 4, 1, 5], [9, 2, 6, 5], [3, 5, 8, 9, 7, 9]]
+    mono_out, epd_out = [], []
+
+    mono = Engine(cfg, params, max_batch=4, max_len=64)
+    for p in prompts:
+        r = Request(prompt_tokens=list(p), max_new_tokens=6)
+        mono.run_request(r)
+        mono_out.append(r.output_tokens)
+
+    cluster = EPDCluster(cfg, params, max_batch=4, max_len=64)
+    reqs = [Request(prompt_tokens=list(p), max_new_tokens=6) for p in prompts]
+    for r in reqs:
+        cluster.submit(r)
+    cluster.run_until_done()
+    epd_out = [r.output_tokens for r in reqs]
+
+    assert mono_out == epd_out
+
+
+def test_paper_headline_epd_beats_pd_on_effective_throughput():
+    """Paper abstract: EPD disaggregation improves effective throughput
+    over PD-disaggregated deployment under TTFT<=2000ms / TPOT<=50ms.
+
+    PD-disaggregation (no separate Encode) == 'EP-D' here: encode rides
+    with prefill. The paper's (E-P)-D improves on it by 57-69%; we assert
+    a substantial (>20%) win, hardware constants differ."""
+    model = get_config("openpangu-7b-vl")
+    pd = simulate(model, "EP-D", SHAREGPT_4O, rate=8.0, n_requests=256,
+                  seed=11)
+    epd = simulate(model, "(E-P)-D", SHAREGPT_4O, rate=8.0, n_requests=256,
+                   seed=11)
+    eff_pd = pd.effective_throughput(2000, 50)
+    eff_epd = epd.effective_throughput(2000, 50)
+    assert eff_epd > eff_pd * 1.2, (eff_pd, eff_epd)
+
+
+def test_slo_degrades_gracefully_with_rate():
+    model = get_config("openpangu-7b-vl")
+    slos = []
+    for rate in (2.0, 6.0, 10.0):
+        m = simulate(model, "(E-P)-D", SHAREGPT_4O, rate=rate,
+                     n_requests=128, seed=2)
+        slos.append(m.slo_attainment(2000, 50))
+    assert slos[0] >= slos[1] >= slos[2] - 1e-9
+    assert slos[0] > 0.9

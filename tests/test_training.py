@@ -1,0 +1,83 @@
+"""Training substrate: optimizer correctness + end-to-end learning."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.model import init_params
+from repro.training.data import synthetic_batches
+from repro.training.optimizer import AdamW
+from repro.training.train import make_train_step, train_loop
+
+
+def test_adamw_decreases_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0, warmup_steps=1)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_grad_clip():
+    opt = AdamW(lr=1e-3, grad_clip=1.0, warmup_steps=1)
+    params = {"w": jnp.zeros(4)}
+    state = opt.init(params)
+    huge = {"w": jnp.full(4, 1e9)}
+    p2, _ = opt.update(huge, state, params)
+    assert float(jnp.abs(p2["w"]).max()) < 1.0   # step bounded by lr-ish
+
+
+def test_smollm_learns_synthetic_task():
+    cfg = get_config("smollm-135m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batches = synthetic_batches(cfg, batch=8, seq=32, steps=30, seed=1)
+    _, _, losses = train_loop(cfg, params, batches,
+                              opt=AdamW(lr=3e-3, warmup_steps=10))
+    assert losses[-1] < losses[0] - 1.0, (losses[0], losses[-1])
+
+
+def test_microbatched_grads_match_full_batch():
+    """Gradient accumulation must match the full-batch gradient.
+
+    (Gradients, not post-Adam params: at step 1 Adam's update is ~sign(g),
+    so params are discontinuous in g near zero — not a meaningful check.)
+    """
+    from repro.models.model import train_forward
+    cfg = get_config("smollm-135m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = next(synthetic_batches(cfg, batch=8, seq=16, steps=1, seed=2))
+
+    def loss_fn(p, b):
+        return train_forward(p, cfg, b, remat=False)[0]
+
+    g_full = jax.grad(loss_fn)(params, batch)
+    n = 4
+    micro = jax.tree.map(
+        lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+    g_acc = jax.tree.map(jnp.zeros_like, params)
+    losses = []
+    for i in range(n):
+        mb = jax.tree.map(lambda x: x[i], micro)
+        l, g = jax.value_and_grad(loss_fn)(params, mb)
+        losses.append(float(l))
+        g_acc = jax.tree.map(lambda a, b: a + b / n, g_acc, g)
+    for a, b in zip(jax.tree.leaves(g_full), jax.tree.leaves(g_acc)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-3)
+
+
+def test_remat_matches_no_remat():
+    cfg = get_config("smollm-135m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = next(synthetic_batches(cfg, batch=4, seq=16, steps=1, seed=3))
+    opt = AdamW(lr=1e-3, warmup_steps=1)
+    p_a, _, _ = jax.jit(make_train_step(cfg, opt, remat=False))(
+        params, opt.init(params), batch)
+    p_b, _, _ = jax.jit(make_train_step(cfg, opt, remat=True))(
+        params, opt.init(params), batch)
+    for a, b in zip(jax.tree.leaves(p_a), jax.tree.leaves(p_b)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
