@@ -71,6 +71,103 @@ def bench_kernels() -> List[str]:
     return rows
 
 
+def bench_paged_kv() -> List[str]:
+    """Paged-vs-dense decode attention + per-insert bytes moved.
+
+    Decode: dense streams all max_len KV positions per step; paged
+    gathers only the pages of the ACTUAL length through the block table.
+    Insert: dense copies a whole (layers, max_len, ...) slot row; paged
+    moves ceil(prompt/page) pages. Emits a BENCH_paged_kv.json snapshot
+    next to the repo root so the perf trajectory is recorded per PR.
+    """
+    import json
+    import os
+
+    import numpy as np
+
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    from repro.kernels.paged_decode_attention.ref import (
+        paged_decode_attention_ref)
+
+    rows = ["paged_kv,us_per_call,derived"]
+    key = jax.random.PRNGKey(0)
+    snap = {}
+
+    # ---- decode attention: max_len stream vs actual-length pages ----
+    b, nq, nkv, hd = 4, 8, 2, 64
+    max_len, actual, page = 4096, 128, 16
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, nq, hd))
+    kd = jax.random.normal(ks[1], (b, max_len, nkv, hd))
+    vd = jax.random.normal(ks[2], (b, max_len, nkv, hd))
+    kp_pos = jnp.broadcast_to(jnp.arange(max_len), (b, max_len))
+    qp = jnp.array([actual - 1] * b)
+    dense_fn = jax.jit(lambda *a: decode_attention_ref(*a))
+    us_dense = _time(dense_fn, q, kd, vd, qp, kp_pos)
+
+    n_pages = b * (actual // page) + 1
+    k_pool = jax.random.normal(ks[1], (n_pages, page, nkv, hd))
+    v_pool = jax.random.normal(ks[2], (n_pages, page, nkv, hd))
+    tbl = jnp.asarray(
+        1 + np.arange(b * (actual // page)).reshape(b, -1), jnp.int32)
+    lens = jnp.array([actual] * b, jnp.int32)
+    paged_fn = jax.jit(lambda *a: paged_decode_attention_ref(*a))
+    us_paged = _time(paged_fn, q, k_pool, v_pool, tbl, lens)
+    rows.append(f"decode_dense_ref_S{max_len},{us_dense:.0f},"
+                f"streams_{max_len}_kv")
+    rows.append(f"decode_paged_ref_len{actual},{us_paged:.0f},"
+                f"{us_dense / max(us_paged, 1e-9):.1f}x_vs_dense")
+    snap["decode_dense_us"] = round(us_dense, 1)
+    snap["decode_paged_us"] = round(us_paged, 1)
+    snap["decode_speedup"] = round(us_dense / max(us_paged, 1e-9), 2)
+
+    # ---- per-insert KV bytes moved (the P->D handoff payload) ----
+    from repro.configs import get_config
+    from repro.models.model import init_params
+    from repro.serving.engine import Engine
+    from repro.serving.request import Request
+
+    cfg = get_config("smollm-135m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompt = list(range(2, 10))               # prompt=8 (acceptance shape)
+    dense_eng = Engine(cfg, params, max_batch=4, max_len=128)
+    r = Request(prompt_tokens=list(prompt), max_new_tokens=2)
+    first, payload = dense_eng.prefill_request(r)
+    dense_eng.insert(r, payload, first)
+
+    paged_src = Engine(cfg, params, max_batch=1, max_len=128, paged=True,
+                       page_size=16)
+    paged_dst = Engine(cfg, params, max_batch=4, max_len=128, paged=True,
+                       page_size=16)
+    r2 = Request(prompt_tokens=list(prompt), max_new_tokens=2)
+    first2, payload2 = paged_src.prefill_request(r2)
+    paged_dst.insert(r2, payload2, first2)    # cross-engine page copy
+    ratio = dense_eng.kv_insert_bytes / max(paged_dst.kv_insert_bytes, 1)
+    rows.append(f"insert_bytes_dense_b4_len128_p8,"
+                f"{dense_eng.kv_insert_bytes},bytes_per_insert")
+    rows.append(f"insert_bytes_paged_b4_len128_p8,"
+                f"{paged_dst.kv_insert_bytes},{ratio:.1f}x_reduction")
+    r3 = Request(prompt_tokens=list(prompt), max_new_tokens=2)
+    first3, payload3 = paged_dst.prefill_request(r3)
+    paged_dst.insert(r3, payload3, first3)    # fused: zero-copy handoff
+    rows.append(f"insert_bytes_paged_fused,"
+                f"{paged_dst.kv_insert_bytes},block_table_handoff_only")
+    snap["insert_bytes_dense"] = int(dense_eng.kv_insert_bytes)
+    snap["insert_bytes_paged"] = int(payload2.kv_nbytes)
+    snap["insert_bytes_fused"] = int(paged_dst.kv_insert_bytes)
+    snap["insert_bytes_ratio"] = round(ratio, 2)
+    snap["config"] = dict(model="smollm-135m.reduced", max_batch=4,
+                          max_len=128, prompt=8, page_size=16)
+
+    out_path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_paged_kv.json")
+    with open(out_path, "w") as f:
+        json.dump(snap, f, indent=2, sort_keys=True)
+        f.write("\n")
+    rows.append(f"# snapshot -> {out_path}")
+    return rows
+
+
 def bench_engine() -> List[str]:
     from repro.configs import get_config
     from repro.models.model import init_params

@@ -9,7 +9,8 @@ import time
 def main() -> None:
     t_start = time.time()
     from benchmarks.extensions import EXTENSION_BENCHMARKS
-    from benchmarks.kernel_bench import bench_engine, bench_kernels
+    from benchmarks.kernel_bench import (bench_engine, bench_kernels,
+                                         bench_paged_kv)
     from benchmarks.paper_tables import ALL_BENCHMARKS
 
     only = sys.argv[1] if len(sys.argv) > 1 else None
@@ -24,6 +25,9 @@ def main() -> None:
         for row in bench_kernels():
             print(row)
         for row in bench_engine():
+            print(row)
+    if only is None or "paged" in only:
+        for row in bench_paged_kv():
             print(row)
     print(f"# total {time.time() - t_start:.1f}s")
 

@@ -60,17 +60,22 @@ class EPDCluster:
 
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
                  max_len: int = 128, kv_scheme: str = "grouped",
-                 hw: Hardware = V5E):
+                 hw: Hardware = V5E, paged: bool = False,
+                 page_size: int = 16):
         self.cfg = cfg
         self.store = MMStore()
-        self.cost = CostModel(cfg, hw)
+        self.cost = CostModel(cfg, hw,
+                              page_tokens=page_size if paged else 0)
         self.kv_scheme = kv_scheme
+        self.paged = paged
         # Prefill engine: batch 1 (prefill is per-request);
         # Decode engine: the continuous-batching instance.
         self.prefill_engine = Engine(cfg, params, max_batch=1,
-                                     max_len=max_len)
+                                     max_len=max_len, paged=paged,
+                                     page_size=page_size)
         self.decode_engine = Engine(cfg, params, max_batch=max_batch,
-                                    max_len=max_len)
+                                    max_len=max_len, paged=paged,
+                                    page_size=page_size)
         self.report = ClusterReport()
         self._pending: List[Request] = []
 
@@ -112,14 +117,19 @@ class EPDCluster:
 
     # ---- P->D transfer + Decode import ----
     def transfer_and_insert(self, req: Request, caches, first: int) -> None:
-        nbytes = cache_nbytes(caches)
+        # paged payloads already carry their page-granular byte count;
+        # dense payloads are measured from the actual arrays.
+        nbytes = getattr(caches, "kv_nbytes", None)
+        if nbytes is None:
+            nbytes = cache_nbytes(caches)
         p = kv_plan(self.kv_scheme,
                     n_layers=self.cfg.n_layers,
                     bytes_per_layer=nbytes / self.cfg.n_layers,
                     per_layer_compute=self.cost.per_layer_prefill_time(
                         req.total_prompt_len),
                     handshake=self.cost.hw.handshake,
-                    link_bw=self.cost.hw.link_bw)
+                    link_bw=self.cost.hw.link_bw,
+                    page_bytes=self.cost.kv_page_bytes_per_layer())
         self.report.kv_plans.append(p)
         self.decode_engine.insert(req, caches, first)
 

@@ -12,6 +12,7 @@ de-rates from peak, the usual 0.4-0.6 MFU band for prefill-like work.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, replace
 
 from repro.configs.base import ModelConfig
@@ -62,6 +63,9 @@ class CostModel:
     cfg: ModelConfig
     hw: Hardware = V5E
     vit: EncoderModel = EncoderModel()
+    # paged KV: tokens per pool page (0 = dense layout). P->D payloads
+    # round up to whole pages and transfers plan at page granularity.
+    page_tokens: int = 0
 
     # ---- stage compute ------------------------------------------------------
     def _chip_rate(self, chips: int, tp: int) -> float:
@@ -135,10 +139,23 @@ class CostModel:
         per_layer = nh * cfg.ssm.head_dim * cfg.ssm.state_dim * 4  # f32
         return len(cfg.ssm_layers) * per_layer
 
+    def kv_page_bytes(self) -> float:
+        """Bytes of one KV pool page across all attention layers
+        (0 when the layout is dense)."""
+        return self.page_tokens * self.kv_bytes_per_token()
+
+    def kv_page_bytes_per_layer(self) -> float:
+        """One layer's slice of a KV page — the rounding quantum for
+        per-layer transfer planning (kv_transfer.plan(page_bytes=...))."""
+        n_attn = max(len(self.cfg.attn_layers), 1)
+        return self.kv_page_bytes() / n_attn
+
     def kv_bytes(self, prompt_len: int) -> float:
-        """Total P->D payload for one request."""
-        return (self.kv_bytes_per_token() * self._eff_kv(prompt_len)
-                + self.ssm_state_bytes())
+        """Total P->D payload for one request (page-rounded when paged)."""
+        eff = self._eff_kv(prompt_len)
+        if self.page_tokens:
+            eff = math.ceil(eff / self.page_tokens) * self.page_tokens
+        return self.kv_bytes_per_token() * eff + self.ssm_state_bytes()
 
     def feature_bytes(self, n_tokens: int) -> float:
         """E->P payload (projected features, d_model wide — Table 3)."""

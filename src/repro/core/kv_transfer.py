@@ -96,9 +96,19 @@ def choose_group_size(n_layers: int, per_layer_compute: float,
 
 def plan(scheme: Scheme, *, n_layers: int, bytes_per_layer: float,
          per_layer_compute: float, handshake: float, link_bw: float,
-         group_size: int = 0) -> TransferPlan:
-    """Build the transmission schedule for one request's KV cache."""
+         group_size: int = 0, page_bytes: float = 0.0) -> TransferPlan:
+    """Build the transmission schedule for one request's KV cache.
+
+    page_bytes > 0 switches to page-granular transmission (paged KV
+    pools): each layer's payload is rounded up to whole pages, so every
+    group's bytes are page-aligned — transfers map 1:1 onto pool pages
+    on both ends and the wire never ships a partial page. The padding
+    cost of the last partial page is thereby made explicit in the
+    schedule instead of hidden in the runtime.
+    """
     t_c = per_layer_compute
+    if page_bytes > 0:
+        bytes_per_layer = math.ceil(bytes_per_layer / page_bytes) * page_bytes
     t_x = bytes_per_layer / link_bw
     prefill_time = n_layers * t_c
     payload = n_layers * bytes_per_layer

@@ -100,6 +100,7 @@ class SimConfig:
     decode_batch_max: int = 512
     replicas: int = 1
     hw: Hardware = V5E
+    kv_page_tokens: int = 0             # paged KV pool page size (0 = dense)
 
 
 @dataclass
@@ -234,7 +235,8 @@ class _Instance:
                     / sim.model.n_layers,
                     per_layer_compute=base_dur / sim.model.n_layers,
                     handshake=sim.cfg.hw.handshake,
-                    link_bw=sim.cfg.hw.link_bw)
+                    link_bw=sim.cfg.hw.link_bw,
+                    page_bytes=sim.cost.kv_page_bytes_per_layer())
         sim.kv_plans.append(p)
         # layer-wise blocking handshakes stretch prefill itself
         sim.loop.after(p.prefill_end, lambda: self._finish_prefill(
@@ -281,7 +283,7 @@ class Simulator:
         dep = parse(cfg.deployment) if isinstance(cfg.deployment, str) \
             else cfg.deployment
         self.deployment = scale(dep, cfg.replicas)
-        self.cost = CostModel(model, cfg.hw)
+        self.cost = CostModel(model, cfg.hw, page_tokens=cfg.kv_page_tokens)
         self.loop = EventLoop()
         self.router = Router(self.deployment)
         self.store = MMStore()
@@ -371,7 +373,8 @@ def simulate(model: ModelConfig, deployment: str, dataset: DatasetSpec,
              *, rate: float, n_requests: int = 512, seed: int = 0,
              kv_scheme: str = "grouped", ep_async: bool = True,
              replicas: int = 1, hw: Hardware = V5E,
-             per_chip_rate: bool = False) -> SimMetrics:
+             per_chip_rate: bool = False,
+             kv_page_tokens: int = 0) -> SimMetrics:
     """Run one deployment against a trace injected at ``rate`` req/s.
 
     per_chip_rate=True multiplies the rate by the deployment's chip count
@@ -381,7 +384,8 @@ def simulate(model: ModelConfig, deployment: str, dataset: DatasetSpec,
     only closes under that reading).
     """
     cfg = SimConfig(deployment=deployment, kv_scheme=kv_scheme,
-                    ep_async=ep_async, replicas=replicas, hw=hw)
+                    ep_async=ep_async, replicas=replicas, hw=hw,
+                    kv_page_tokens=kv_page_tokens)
     sim = Simulator(model, cfg)
     if per_chip_rate:
         rate = rate * sim.deployment.n_chips

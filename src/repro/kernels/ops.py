@@ -31,6 +31,26 @@ def attention(q, k, v, q_pos, kv_pos, *, window: Optional[int] = None,
     return attention_ref(q, k, v, q_pos, kv_pos, window=window, causal=causal)
 
 
+def paged_attention(q, k_pool, v_pool, block_tbl, lengths, *,
+                    window: Optional[int] = None) -> jax.Array:
+    """Single-token attention over a paged KV pool.
+
+    q: (b, nq, hd); k_pool, v_pool: (P, page, nkv, hd);
+    block_tbl: (b, max_pages) int32; lengths: (b,) valid tokens
+    (including the current one). See paged_decode_attention/ref.py.
+    """
+    if dispatch.use_pallas():
+        from repro.kernels.paged_decode_attention.kernel import (
+            paged_decode_attention)
+        return paged_decode_attention(q, k_pool, v_pool, block_tbl, lengths,
+                                      window=window,
+                                      interpret=dispatch.interpret())
+    from repro.kernels.paged_decode_attention.ref import (
+        paged_decode_attention_ref)
+    return paged_decode_attention_ref(q, k_pool, v_pool, block_tbl, lengths,
+                                      window=window)
+
+
 def ssd(x, dt, a, b, c, d_skip, chunk: int, init_state=None):
     """Chunked SSD scan. See ssd_scan/ref.py for shapes."""
     if dispatch.use_pallas():

@@ -1,0 +1,128 @@
+"""Pallas TPU paged decode attention: one query token vs. a paged KV pool.
+
+Flash-decode over a block table instead of a contiguous cache. The KV
+pool is a flat array of fixed-size pages shared by all slots; each
+slot's block table row names the physical page of every logical page.
+The page dimension is the innermost (sequential) grid axis and the
+block table + per-slot lengths ride in via scalar prefetch, so the
+pipeline's k/v index map resolves the *physical* page to DMA before the
+kernel body runs.
+
+HBM traffic is proportional to each slot's ACTUAL length, not the pool
+or table width: for grid steps past the slot's last page the index map
+clamps to the last real page — Pallas elides the DMA when consecutive
+grid steps map the same block — and the compute is skipped with
+``pl.when``. This is the Decode-stage hot loop of the disaggregated
+serving system; arithmetic intensity ~= GQA group size, exactly as the
+dense decode kernel, but without streaming `max_len` KV for short
+sequences.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, scale: float, window: Optional[int],
+            page: int, n_pages_max: int):
+    bi = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[bi]                               # valid tokens incl. q
+    n_pages = (length + page - 1) // page
+
+    @pl.when(j < n_pages)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (g, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # (page, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+
+        kpos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        qpos = length - 1
+        valid = kpos < length                          # per-slot length mask
+        if window is not None:
+            valid &= kpos > qpos - window
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(valid, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_pages_max - 1)
+    def _done():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_tbl, lengths, *,
+                           window: Optional[int] = None,
+                           interpret: bool = False):
+    """q: (b, nq, hd); k_pool, v_pool: (P, page, nkv, hd);
+    block_tbl: (b, max_pages) int32; lengths: (b,) int32 valid tokens
+    including the current one. Returns (b, nq, hd)."""
+    b, nq, hd = q.shape
+    page, nkv = k_pool.shape[1], k_pool.shape[2]
+    g = nq // nkv
+    n_pages_max = block_tbl.shape[1]
+
+    qg = q.reshape(b, nkv, g, hd)
+    tbl = block_tbl.astype(jnp.int32)
+    lens = lengths.astype(jnp.int32)
+
+    def kv_page_index(bi, h, j, tbl_ref, len_ref):
+        # Clamp trailing grid steps to the slot's LAST real page so the
+        # pipeline re-maps the same block (no fresh DMA) once past the
+        # actual length; compute for those steps is masked off above.
+        n_pages = (len_ref[bi] + page - 1) // page
+        jj = jnp.minimum(j, jnp.maximum(n_pages - 1, 0))
+        return (tbl_ref[bi, jj], 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, nkv, n_pages_max),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda bi, h, j, t, s: (bi, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, hd), kv_page_index),
+            pl.BlockSpec((1, page, 1, hd), kv_page_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda bi, h, j, t, s: (bi, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, hd), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_kernel, scale=hd ** -0.5, window=window,
+                             page=page, n_pages_max=n_pages_max)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, nkv, g, hd), q.dtype),
+        interpret=interpret,
+    )(tbl, lens, qg, k_pool, v_pool)
+    return out.reshape(b, nq, hd)

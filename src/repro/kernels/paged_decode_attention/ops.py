@@ -1,0 +1,25 @@
+"""Jit'd public wrapper for the paged decode-attention kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels import dispatch
+from repro.kernels.paged_decode_attention.kernel import (
+    paged_decode_attention as _kernel)
+from repro.kernels.paged_decode_attention.ref import paged_decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_attention(q, k_pool, v_pool, block_tbl, lengths, *,
+                           window: Optional[int] = None,
+                           interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = dispatch.interpret()
+    return _kernel(q, k_pool, v_pool, block_tbl, lengths, window=window,
+                   interpret=interpret)
+
+
+__all__ = ["paged_decode_attention", "paged_decode_attention_ref"]

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the paged decode-attention kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, block_tbl, lengths,
+                               *, window: Optional[int] = None) -> jax.Array:
+    """Single-token GQA attention over a paged KV pool.
+
+    q:              (b, nq, hd) — the new token's queries.
+    k_pool, v_pool: (n_pages, page, nkv, hd) — shared physical pages.
+    block_tbl:      (b, max_pages) int32 — physical page of each logical
+                    page; unmapped entries point at the trash page 0.
+    lengths:        (b,) int32 — valid KV tokens per slot INCLUDING the
+                    current one (the query sits at position lengths-1).
+                    Slots with length 0 produce unspecified output.
+    Returns (b, nq, hd).
+
+    Implementation: gather the slot's pages into a dense contiguous view
+    and defer to the dense decode oracle with positions rebuilt from the
+    page geometry (token t of a slot lives at logical position t).
+    """
+    b = q.shape[0]
+    page, nkv, hd = k_pool.shape[1:]
+    k = k_pool[block_tbl].reshape(b, -1, nkv, hd).astype(q.dtype)
+    v = v_pool[block_tbl].reshape(b, -1, nkv, hd).astype(q.dtype)
+    S = k.shape[1]
+    pos = jnp.arange(S, dtype=jnp.int32)[None]
+    kv_pos = jnp.where(pos < lengths[:, None], pos, -1)
+    q_pos = jnp.maximum(lengths.astype(jnp.int32) - 1, 0)
+    return decode_attention_ref(q, k, v, q_pos, kv_pos, window=window)

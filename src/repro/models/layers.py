@@ -68,6 +68,32 @@ def make_attn_cache(cfg: ModelConfig, n_repeats: int, batch: int, max_len: int,
                      jnp.full(pshape, -1, jnp.int32))
 
 
+class PagedAttnCache(NamedTuple):
+    """Per-pattern-position paged KV pool, shared by all decode slots.
+
+    k, v: (repeats, n_pages, page_size, n_kv, head_dim). Physical page 0
+    is reserved as the trash page (see serving.kv_pool): unmapped
+    block-table entries point there, so stray writes never corrupt live
+    pages. Token t of a slot lives in logical page t // page_size at
+    offset t % page_size; the slot's block table row maps logical pages
+    to physical ones. No kv_pos array is needed — positions are implied
+    by page geometry and masked by per-slot length.
+    """
+
+    k: jax.Array
+    v: jax.Array
+
+
+def make_paged_attn_cache(cfg: ModelConfig, n_repeats: int, n_pages: int,
+                          page_size: int, dtype=jnp.bfloat16,
+                          abstract: bool = False):
+    shape = (n_repeats, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+    if abstract:
+        return PagedAttnCache(jax.ShapeDtypeStruct(shape, dtype),
+                              jax.ShapeDtypeStruct(shape, dtype))
+    return PagedAttnCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
 def _split_heads(x, n, hd):
     return x.reshape(x.shape[:-1] + (n, hd))
 
@@ -92,15 +118,22 @@ def cross_attention_block(p, x, positions, enc_kv, cfg: ModelConfig):
 
 
 def attention_block(p, x, positions, cfg: ModelConfig, *, window=None,
-                    cache: Optional[Tuple[jax.Array, jax.Array, jax.Array]] = None,
+                    cache: Optional[Tuple[jax.Array, ...]] = None,
                     cur_len: Optional[jax.Array] = None,
-                    causal: bool = True):
+                    causal: bool = True,
+                    pages: Optional[jax.Array] = None):
     """One self-attention sub-block with residual.
 
-    cache: per-repeat (k_cache, v_cache, kv_pos) views — (b, S, nkv, hd) /
-      (b, S). When given and x is a single decode token, the new KV is
-      written at slot ``cur_len % S`` (ring buffer; S == max_len for full
-      attention so the modulo is a no-op until overflow).
+    cache: per-repeat cache views. Dense: (k_cache, v_cache, kv_pos) —
+      (b, S, nkv, hd) / (b, S). When given and x is a single decode
+      token, the new KV is written at slot ``cur_len % S`` (ring buffer;
+      S == max_len for full attention so the modulo is a no-op until
+      overflow).
+    pages: (b, max_pages) int32 block table — switches the cache to the
+      PAGED layout: cache is (k_pool, v_pool) with shape
+      (n_pages, page, nkv, hd). Decode writes one token into its slot's
+      current page; prefill scatters the sequence's pages into the pool
+      (tokens past a slot's mapped pages land on the trash page 0).
     Returns (out, new_cache_views_or_None).
     """
     h = rms_norm(x, p["norm"], cfg.norm_eps)
@@ -120,7 +153,39 @@ def attention_block(p, x, positions, cfg: ModelConfig, *, window=None,
     k = rope(k, positions, cfg.rope_theta)
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and pages is not None:
+        # ---- paged KV pool: (n_pages, page, nkv, hd) shared by slots ----
+        ck, cv = cache
+        page = ck.shape[1]
+        b = x.shape[0]
+        if x.shape[1] == 1:
+            # decode: write one token into the slot's current page
+            pos = cur_len.astype(jnp.int32)                       # (b,)
+            pidx = jnp.clip(pos // page, 0, pages.shape[1] - 1)
+            phys = jnp.take_along_axis(pages, pidx[:, None], 1)[:, 0]
+            off = pos % page
+            ck = ck.at[phys, off].set(k[:, 0].astype(ck.dtype))
+            cv = cv.at[phys, off].set(v[:, 0].astype(cv.dtype))
+            new_cache = (ck, cv)
+            out = K.paged_attention(q[:, 0], ck, cv, pages, pos + 1,
+                                    window=window)[:, None]
+        else:
+            # prefill: scatter the (padded) sequence's pages into the pool
+            S = k.shape[1]
+            if S % page:
+                raise ValueError(
+                    f"paged prefill length {S} not a multiple of page {page}")
+            npg = S // page
+            if npg > pages.shape[1]:
+                raise ValueError("prefill longer than block table")
+            flat = pages[:, :npg].reshape(-1)
+            kp = k.reshape(b * npg, page, *k.shape[2:])
+            vp = v.reshape(b * npg, page, *v.shape[2:])
+            ck = ck.at[flat].set(kp.astype(ck.dtype))
+            cv = cv.at[flat].set(vp.astype(cv.dtype))
+            new_cache = (ck, cv)
+            out = K.attention(q, k, v, positions, positions, window=window)
+    elif cache is not None:
         ck, cv, cpos = cache
         S = ck.shape[1]
         if x.shape[1] == 1:

@@ -27,7 +27,9 @@ from repro.models.partitioning import shard
 
 def make_caches(cfg: ModelConfig, batch: int, max_len: int, *,
                 dtype=jnp.bfloat16, kv_dtype=None, abstract: bool = False,
-                for_decode: bool = False) -> Dict[str, Any]:
+                for_decode: bool = False, layout: str = "dense",
+                page_size: int = 16, n_pages: int = 0,
+                with_attn: bool = True) -> Dict[str, Any]:
     """Cache pytree for serving. One entry per pattern position.
 
     for_decode=True clamps sliding-window caches to the window (ring
@@ -36,12 +38,40 @@ def make_caches(cfg: ModelConfig, batch: int, max_len: int, *,
     kv_dtype: storage dtype for attention KV only (e.g. fp8_e4m3 — the
     beyond-paper decode optimization in EXPERIMENTS.md §Perf); SSM state
     and conv tails keep ``dtype``/f32.
+    layout="paged": attention KV lives in a shared page pool of
+    ``n_pages`` physical pages of ``page_size`` tokens (page 0 reserved
+    as trash — see serving.kv_pool) and the pytree grows a "pages" block
+    table (batch, max_len // page_size). Sliding-window caches are not
+    ring-clamped on the paged path — the window is enforced by masking,
+    and page-level eviction is the follow-up that reclaims the memory.
+    SSM state and cross-KV stay slot-indexed (fixed per-slot size).
+    with_attn=False skips the attention-KV allocations (entries stay
+    None) — for side-state-only pytrees whose "attn" the caller swaps
+    in from a shared page pool (paged prefill staging).
     """
     kv_dtype = kv_dtype or dtype
+    paged = layout == "paged"
+    if paged:
+        if max_len % page_size:
+            raise ValueError(
+                f"max_len {max_len} not a multiple of page_size {page_size}")
+        if n_pages < 2:
+            raise ValueError("paged layout needs n_pages >= 2 "
+                             "(page 0 is the reserved trash page)")
     attn = []
     ssm = []
     for spec in cfg.pattern:
         if spec.mixer in ("attn", "swa"):
+            if not with_attn:
+                attn.append(None)
+                ssm.append(None)
+                continue
+            if paged:
+                attn.append(L.make_paged_attn_cache(
+                    cfg, cfg.n_repeats, n_pages, page_size, kv_dtype,
+                    abstract))
+                ssm.append(None)
+                continue
             window = (cfg.sliding_window
                       if spec.mixer == "swa" and for_decode else None)
             attn.append(L.make_attn_cache(cfg, cfg.n_repeats, batch, max_len,
@@ -68,22 +98,37 @@ def make_caches(cfg: ModelConfig, batch: int, max_len: int, *,
                      jnp.full(pshape, -1, jnp.int32))
     lengths = (jax.ShapeDtypeStruct((batch,), jnp.int32) if abstract
                else jnp.zeros((batch,), jnp.int32))
-    return {"attn": tuple(attn), "ssm": tuple(ssm), "cross": cross,
-            "len": lengths}
+    caches = {"attn": tuple(attn), "ssm": tuple(ssm), "cross": cross,
+              "len": lengths}
+    if paged:
+        tshape = (batch, max_len // page_size)
+        caches["pages"] = (jax.ShapeDtypeStruct(tshape, jnp.int32) if abstract
+                           else jnp.zeros(tshape, jnp.int32))
+    return caches
 
 
-def cache_pspecs(cfg: ModelConfig, rules) -> Dict[str, Any]:
+def cache_pspecs(cfg: ModelConfig, rules, layout: str = "dense"
+                 ) -> Dict[str, Any]:
     """PartitionSpecs matching make_caches structure.
 
     KV-cache sharding adapts per arch: heads when n_kv_heads divides the
     model axis (classic TP), else the sequence dim (flash-decode style) —
     e.g. smollm's kv=3 or glm4's kv=2 cannot split 16 ways by head.
+    layout="paged": the pool's page axis takes the role of the sequence
+    axis (pages spread flash-decode style); the block table and lengths
+    stay batch-sharded.
     """
     from repro.models.partitioning import logical_to_pspec as lp
+    paged = layout == "paged"
     head_ok = (rules is not None and rules.size("kv_heads") > 1 and
                cfg.n_kv_heads % rules.size("kv_heads") == 0)
     seq_pref = rules is not None and rules.size("kv_seq") > 1
-    if rules is not None and not head_ok and not seq_pref:
+    if paged:
+        # (repeats, n_pages, page, nkv, hd)
+        kv_axes = ("layers", "kv_seq", None,
+                   "kv_heads" if head_ok else None, None)
+        pos_axes = None
+    elif rules is not None and not head_ok and not seq_pref:
         # fall back to sequence sharding on whatever axis 'kv_heads' used
         kv_axes = ("layers", "batch", "kv_heads", None, None)
         pos_axes = ("layers", "batch", "kv_heads")
@@ -95,8 +140,11 @@ def cache_pspecs(cfg: ModelConfig, rules) -> Dict[str, Any]:
     for spec in cfg.pattern:
         if spec.mixer in ("attn", "swa"):
             kv = lp(kv_axes, rules)
-            pos = lp(pos_axes, rules)
-            attn.append(L.AttnCache(kv, kv, pos))
+            if paged:
+                attn.append(L.PagedAttnCache(kv, kv))
+            else:
+                pos = lp(pos_axes, rules)
+                attn.append(L.AttnCache(kv, kv, pos))
             ssm.append(None)
         elif spec.mixer == "ssm":
             st = lp(("layers", "batch", "act_heads", None, None), rules)
@@ -110,8 +158,11 @@ def cache_pspecs(cfg: ModelConfig, rules) -> Dict[str, Any]:
     if cfg.encoder is not None:
         kv = lp(("layers", "batch", None, "kv_heads", None), rules)
         cross = (kv, kv, lp(("layers", "batch", None), rules))
-    return {"attn": tuple(attn), "ssm": tuple(ssm), "cross": cross,
-            "len": lp(("batch",), rules)}
+    specs = {"attn": tuple(attn), "ssm": tuple(ssm), "cross": cross,
+             "len": lp(("batch",), rules)}
+    if paged:
+        specs["pages"] = lp(("batch", None), rules)
+    return specs
 
 
 # ---------------------------------------------------------------------------
@@ -179,6 +230,8 @@ def run_decoder(params, cfg: ModelConfig, x, positions, *,
     """
     pat = cfg.pattern
     cur_len = caches["len"] if caches is not None else None
+    pages = caches.get("pages") if caches is not None else None
+    attn_cls = L.PagedAttnCache if pages is not None else L.AttnCache
     decode = caches is not None and x.shape[1] == 1
 
     def body(carry, xs):
@@ -193,8 +246,8 @@ def run_decoder(params, cfg: ModelConfig, x, positions, *,
                 h, nc = L.attention_block(
                     p["attn"], h, positions, cfg, window=window,
                     cache=tuple(attn_c[i]) if attn_c[i] is not None else None,
-                    cur_len=cur_len)
-                new_attn.append(L.AttnCache(*nc) if nc is not None else None)
+                    cur_len=cur_len, pages=pages)
+                new_attn.append(attn_cls(*nc) if nc is not None else None)
                 if cfg.encoder is not None:
                     if decode:
                         ckv = cross_c
@@ -249,4 +302,6 @@ def run_decoder(params, cfg: ModelConfig, x, positions, *,
             "len": caches["len"] + (jnp.int32(step) if decode
                                     else positions.shape[1]),
         }
+        if pages is not None:
+            new_caches["pages"] = pages
     return h, new_caches, aux

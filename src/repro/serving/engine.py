@@ -6,6 +6,17 @@ cache; requests are prefillled one-at-a-time (batch 1) and inserted into a
 free slot, then all active slots decode in lock-step — the standard
 continuous-batching loop, scaled to CPU-sized configs for tests/examples.
 
+Two KV layouts:
+
+* dense (default) — per-slot contiguous caches (batch, max_len, ...);
+  insert copies the request's whole cache row into its slot.
+* paged (``paged=True``) — attention KV lives in a shared page pool with
+  per-slot block tables (serving.kv_pool). Prefill writes straight into
+  pool pages, so insert on the SAME engine is a pure block-table handoff
+  (zero KV bytes moved) and insert from ANOTHER engine moves only the
+  request's pages. Decode attention gathers KV through the block table
+  with per-slot length masking, so HBM traffic tracks actual lengths.
+
 The EPD disaggregation layer (repro.core) drives one or more Engines: the
 Encode stage produces features into the MM Store, Prefill engines run
 ``prefill_request`` and export their caches, Decode engines import caches
@@ -13,7 +24,7 @@ via ``insert`` and run ``decode_step``.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,28 +33,57 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import frontend as FE
 from repro.models.transformer import make_caches
+from repro.serving.kv_pool import PagePool, PagedKVPayload
 from repro.serving.request import Request
-from repro.serving.steps import make_decode_fn, make_insert_fn, make_prefill_fn
+from repro.serving.steps import (make_decode_fn, make_insert_fn,
+                                 make_page_copy_fn, make_paged_insert_fn,
+                                 make_prefill_fn)
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
                  max_len: int = 128, temperature: float = 0.0,
-                 cache_dtype=jnp.float32, kv_dtype=None):
+                 cache_dtype=jnp.float32, kv_dtype=None,
+                 paged: bool = False, page_size: int = 16,
+                 n_pool_pages: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.cache_dtype = cache_dtype
         self.kv_dtype = kv_dtype          # e.g. jnp.float8_e4m3fn (§Perf)
-        self._prefill = make_prefill_fn(cfg)
+        self.paged = paged
+        self.page_size = page_size
         self._decode = make_decode_fn(cfg, temperature)
-        self._insert = make_insert_fn(cfg)
-        self.caches = make_caches(cfg, max_batch, max_len, dtype=cache_dtype,
-                                  kv_dtype=kv_dtype)
+        if paged:
+            if max_len % page_size:
+                raise ValueError(
+                    f"max_len {max_len} not a multiple of page {page_size}")
+            per_slot = max_len // page_size
+            if n_pool_pages is None:
+                # all slots full + one in-flight prefill, + trash page 0
+                n_pool_pages = 1 + (max_batch + 1) * per_slot
+            self.pool = PagePool(n_pool_pages, page_size)
+            self.caches = make_caches(
+                cfg, max_batch, max_len, dtype=cache_dtype,
+                kv_dtype=kv_dtype, layout="paged", page_size=page_size,
+                n_pages=n_pool_pages)
+            self._prefill = make_prefill_fn(cfg, donate_caches=True)
+            self._insert_side = make_paged_insert_fn(cfg)
+            self._copy_pages = make_page_copy_fn()
+            self._slot_pages: List[Optional[np.ndarray]] = [None] * max_batch
+        else:
+            self._prefill = make_prefill_fn(cfg)
+            self._insert = make_insert_fn(cfg)
+            self.caches = make_caches(cfg, max_batch, max_len,
+                                      dtype=cache_dtype, kv_dtype=kv_dtype)
         self.slots: List[Optional[Request]] = [None] * max_batch
         self._last_tok = np.zeros((max_batch,), np.int32)
         self._key = jax.random.PRNGKey(0)
+        # KV bytes moved by the most recent / all insert() calls — the
+        # paged-vs-dense P->D handoff metric (benchmarks, acceptance).
+        self.kv_insert_bytes = 0
+        self.kv_insert_bytes_total = 0
 
     # -- capacity ------------------------------------------------------------
     def free_slots(self) -> List[int]:
@@ -53,11 +93,24 @@ class Engine:
     def n_active(self) -> int:
         return sum(r is not None for r in self.slots)
 
+    @staticmethod
+    def _attn_kv_nbytes(attn) -> int:
+        """Attention-KV bytes per unit of axis 1 across all layers: one
+        physical page for a paged pool (axis 1 = n_pages), one slot row
+        for a dense batch-1 prefill cache (axis 1 = batch)."""
+        n = 0
+        for e in attn:
+            if e is None:
+                continue
+            n += 2 * (e.k.size // e.k.shape[1]) * e.k.dtype.itemsize
+        return int(n)
+
     # -- stages --------------------------------------------------------------
     def prefill_request(self, req: Request, mm_embeds=None,
-                        enc_frames=None) -> Tuple[int, Dict[str, Any]]:
+                        enc_frames=None):
         """Run Prefill for one request (batch=1). Returns (first_token,
-        prefilled_caches) — the caches are the P->D payload."""
+        payload) — the payload is the P->D handoff unit: the prefilled
+        cache pytree (dense) or a PagedKVPayload naming pool pages."""
         cfg = self.cfg
         n_mm = 0
         if mm_embeds is not None and cfg.encoder is None:
@@ -68,29 +121,136 @@ class Engine:
             raise ValueError(
                 f"prompt ({toks.shape[1]}+{n_mm}) exceeds max_len {self.max_len}")
         toks = np.pad(toks, ((0, 0), (0, pad)))
-        lengths = jnp.asarray([len(req.prompt_tokens) + n_mm], jnp.int32)
-        caches = make_caches(cfg, 1, self.max_len, dtype=self.cache_dtype,
-                             kv_dtype=self.kv_dtype)
-        logits, caches = self._prefill(self.params, jnp.asarray(toks),
-                                       lengths, caches, mm_embeds, enc_frames)
-        first = int(jnp.argmax(logits[0]))
-        return first, caches
+        n_tokens = len(req.prompt_tokens) + n_mm
+        lengths = jnp.asarray([n_tokens], jnp.int32)
+        if not self.paged:
+            caches = make_caches(cfg, 1, self.max_len, dtype=self.cache_dtype,
+                                 kv_dtype=self.kv_dtype)
+            logits, caches = self._prefill(self.params, jnp.asarray(toks),
+                                           lengths, caches, mm_embeds,
+                                           enc_frames)
+            first = int(jnp.argmax(logits[0]))
+            return first, caches
 
-    def insert(self, req: Request, prefilled_caches, first_token: int) -> int:
-        """Attach a prefilled request to a free decode slot (P->D import)."""
+        # ---- paged: write KV straight into this engine's pool pages ----
+        ids = self.pool.alloc(self.pool.pages_for(n_tokens))
+        row = np.zeros((1, self.max_len // self.page_size), np.int32)
+        row[0, :len(ids)] = ids
+        side = make_caches(cfg, 1, self.max_len, dtype=self.cache_dtype,
+                           kv_dtype=self.kv_dtype, with_attn=False)
+        pcaches = {"attn": self.caches["attn"], "ssm": side["ssm"],
+                   "cross": side["cross"], "len": side["len"],
+                   "pages": jnp.asarray(row)}
+        logits, new = self._prefill(self.params, jnp.asarray(toks), lengths,
+                                    pcaches, mm_embeds, enc_frames)
+        self.caches["attn"] = new["attn"]      # pool pages updated in place
+        first = int(jnp.argmax(logits[0]))
+        payload = PagedKVPayload(
+            source=self, page_ids=ids, n_tokens=n_tokens,
+            side={"ssm": new["ssm"], "cross": new["cross"],
+                  "len": new["len"]},
+            kv_nbytes=len(ids) * self._attn_kv_nbytes(self.caches["attn"]))
+        return first, payload
+
+    def insert(self, req: Request, prefilled, first_token: int) -> int:
+        """Attach a prefilled request to a free decode slot (P->D import).
+
+        Dense: copy the batch-1 cache into batch slot ``slot``.
+        Paged: adopt the payload's pages — a block-table write when the
+        pages are already in this engine's pool, else an O(pages) copy.
+        A failed paged insert (no free slot, destination pool full)
+        raises before mutating anything: the payload stays retryable.
+        Abandon one with ``release_payload`` or its pages leak.
+        """
         free = self.free_slots()
         if not free:
             raise RuntimeError("no free decode slot")
         slot = free[0]
-        self.caches = self._insert(prefilled_caches, self.caches, slot)
+        if self.paged:
+            self._insert_paged(prefilled, slot)
+        else:
+            self.caches = self._insert(prefilled, self.caches, slot)
+            self.kv_insert_bytes = self._attn_kv_nbytes(prefilled["attn"])
+            self.kv_insert_bytes_total += self.kv_insert_bytes
         self.slots[slot] = req
         self._last_tok[slot] = first_token
         req.output_tokens.append(first_token)
         return slot
 
+    def release_payload(self, payload: PagedKVPayload) -> None:
+        """Drop an un-inserted paged payload, returning its pages to the
+        source pool. A failed ``insert`` (no free slot / destination
+        pool exhausted) leaves the payload intact and retryable; call
+        this when abandoning it instead, or the pages leak until the
+        source engine is rebuilt."""
+        if len(payload.page_ids):
+            payload.source.pool.free(payload.page_ids)
+            payload.page_ids = np.zeros((0,), np.int32)
+
+    def _insert_paged(self, payload: PagedKVPayload, slot: int) -> None:
+        if payload.source is self:
+            ids = payload.page_ids               # zero-copy handoff
+            self.kv_insert_bytes = 0
+        else:
+            ids = self.pool.alloc(payload.n_pages)
+            self.caches["attn"] = self._copy_pages(
+                payload.source.caches["attn"], self.caches["attn"],
+                jnp.asarray(payload.page_ids), jnp.asarray(ids))
+            payload.source.pool.free(payload.page_ids)
+            self.kv_insert_bytes = payload.kv_nbytes
+        self.kv_insert_bytes_total += self.kv_insert_bytes
+        row = np.zeros((self.max_len // self.page_size,), np.int32)
+        row[:len(ids)] = ids
+        self.caches = self._insert_side(payload.side, self.caches,
+                                        jnp.asarray(row), slot)
+        self._slot_pages[slot] = np.asarray(ids)
+
+    def _grow_pages(self, lens: np.ndarray) -> None:
+        """Map a fresh page for any slot whose next token crosses a page
+        boundary (host-side allocator; one batched table update).
+
+        The allocation is all-or-nothing: every slot's demand is summed
+        and allocated in one pool call BEFORE any bookkeeping mutates,
+        so a pool-exhaustion error leaves host state and device block
+        tables consistent (the caller can drain slots and retry)."""
+        width = self.max_len // self.page_size
+        demand: List[Tuple[int, int, int]] = []    # (slot, have, n_new)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            need = min(int(lens[i]) // self.page_size + 1, width)
+            have = len(self._slot_pages[i])
+            if need > have:
+                demand.append((i, have, need - have))
+        if not demand:
+            return
+        ids = self.pool.alloc(sum(n for _, _, n in demand))  # atomic
+        updates: List[Tuple[int, int, int]] = []
+        off = 0
+        for i, have, n in demand:
+            new = ids[off:off + n]
+            off += n
+            self._slot_pages[i] = np.concatenate([self._slot_pages[i], new])
+            updates.extend((i, have + j, int(p)) for j, p in enumerate(new))
+        rows, cols, vals = zip(*updates)
+        self.caches["pages"] = self.caches["pages"].at[
+            list(rows), list(cols)].set(jnp.asarray(vals, jnp.int32))
+
+    def _release_slot(self, slot: int) -> None:
+        if self._slot_pages[slot] is not None:
+            self.pool.free(self._slot_pages[slot])
+            self._slot_pages[slot] = None
+        # unmap the row so stale entries can't alias re-allocated pages;
+        # a freed slot's decode writes land on the trash page.
+        self.caches["pages"] = self.caches["pages"].at[slot].set(0)
+
     def decode_step(self) -> List[Tuple[Request, int, bool]]:
         """One lock-step decode over all slots. Returns (req, token, done)
         for every ACTIVE slot (inactive slots compute but are ignored)."""
+        # single device->host sync per step (not per slot)
+        lens = np.asarray(self.caches["len"])
+        if self.paged:
+            self._grow_pages(lens)
         self._key, sub = jax.random.split(self._key)
         toks, self.caches = self._decode(
             self.params, jnp.asarray(self._last_tok), self.caches, sub)
@@ -104,9 +264,11 @@ class Engine:
             req.output_tokens.append(t)
             done = (t == req.eos_token or
                     len(req.output_tokens) >= req.max_new_tokens or
-                    int(np.asarray(self.caches["len"][i])) >= self.max_len - 1)
+                    int(lens[i]) + 1 >= self.max_len - 1)
             if done:
                 self.slots[i] = None
+                if self.paged:
+                    self._release_slot(i)
             out.append((req, t, done))
         return out
 

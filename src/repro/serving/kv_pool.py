@@ -1,0 +1,107 @@
+"""Paged KV-cache page pool (vLLM-style block allocator).
+
+The device-side KV pool is a flat array of fixed-size pages shared by
+every decode slot: ``(n_repeats, n_pages, page_size, n_kv, head_dim)``
+per attention pattern position (see ``layers.PagedAttnCache``). This
+module is the HOST-side bookkeeping around it:
+
+* :class:`PagePool` — a free-list allocator over physical page ids.
+  Physical page 0 is reserved as the *trash page*: unmapped block-table
+  entries point at it, so decode writes from inactive slots and prefill
+  writes past a request's last page land somewhere harmless instead of
+  corrupting live pages.
+* :class:`PagedKVPayload` — the P->D handoff unit. Instead of a full
+  cache pytree it names the request's physical pages in the *source*
+  engine's pool plus the small per-slot side state (SSM state, cross-KV,
+  length). Inserting into the same engine is a pure block-table update
+  (zero KV bytes moved); inserting into another engine gathers/scatters
+  only those pages — O(one request's pages), never O(pool).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Sequence
+
+import numpy as np
+
+TRASH_PAGE = 0
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``n_tokens`` (at least one)."""
+    return max(1, -(-int(n_tokens) // page_size))
+
+
+class PagePool:
+    """Free-list allocator over the physical pages of one engine's pool.
+
+    Page ids are ints in [1, n_pages); page 0 is the reserved trash page
+    and is never handed out.
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 2:
+            raise ValueError("need n_pages >= 2 (page 0 is reserved)")
+        if page_size < 1:
+            raise ValueError("page_size must be positive")
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        # LIFO free list: recently freed pages are re-used first (their
+        # contents are most likely still resident in cache hierarchies).
+        self._free: List[int] = list(range(n_pages - 1, 0, -1))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return (self.n_pages - 1) - len(self._free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return pages_for(n_tokens, self.page_size)
+
+    def alloc(self, n: int) -> np.ndarray:
+        """Pop ``n`` physical page ids; raises RuntimeError when exhausted."""
+        if n > len(self._free):
+            raise RuntimeError(
+                f"KV page pool exhausted: requested {n} pages, "
+                f"{len(self._free)}/{self.n_pages - 1} free")
+        out = self._free[-n:][::-1]
+        del self._free[-n:]
+        return np.asarray(out, np.int32)
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            p = int(p)
+            if p == TRASH_PAGE:
+                raise ValueError("cannot free the reserved trash page")
+            if not (0 < p < self.n_pages):
+                raise ValueError(f"page id {p} out of range")
+            if p in self._free:
+                raise ValueError(f"double free of page {p}")
+            self._free.append(p)
+
+
+@dataclass
+class PagedKVPayload:
+    """One prefilled request's KV, by reference into the source pool.
+
+    source    — the Engine whose pool holds the pages.
+    page_ids  — (n_pages,) physical ids in the source pool, in sequence
+                order (page j holds tokens [j*page, (j+1)*page)).
+    n_tokens  — true KV length (prompt + multimodal tokens).
+    side      — batch-1 slot state pytree: {"ssm", "cross", "len"}.
+    kv_nbytes — attention-KV bytes these pages occupy across all layers
+                (what a cross-engine insert actually moves).
+    """
+
+    source: Any
+    page_ids: np.ndarray
+    n_tokens: int
+    side: Dict[str, Any] = field(default_factory=dict)
+    kv_nbytes: int = 0
+
+    @property
+    def n_pages(self) -> int:
+        return len(self.page_ids)

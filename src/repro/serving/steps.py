@@ -17,8 +17,18 @@ from repro.models.model import decode_forward, prefill_forward
 from repro.serving.sampling import sample
 
 
-def make_prefill_fn(cfg: ModelConfig):
-    @jax.jit
+def make_prefill_fn(cfg: ModelConfig, donate_caches: bool = False):
+    """Jitted prefill step.
+
+    donate_caches=True is the PAGED variant: ``caches`` is a hybrid
+    pytree — the engine's pool entries under "attn" (donated, so the
+    page scatter is an in-place write, not a pool copy), a fresh
+    batch-1 side state for "ssm"/"cross"/"len", and the request's
+    staging block-table row under "pages".
+    """
+
+    @functools.partial(jax.jit,
+                       donate_argnums=(3,) if donate_caches else ())
     def prefill_fn(params, tokens, lengths, caches, mm_embeds=None,
                    enc_frames=None):
         logits, new_caches = prefill_forward(
@@ -37,6 +47,54 @@ def make_decode_fn(cfg: ModelConfig, temperature: float = 0.0):
         return next_tok, new_caches
 
     return decode_fn
+
+
+def make_paged_insert_fn(cfg: ModelConfig):
+    """Attach a prefilled request to slot ``slot`` of a PAGED decode cache.
+
+    The attention KV is NOT touched — its pages are already in the pool
+    (same-engine handoff) or were copied by ``make_page_copy_fn``; this
+    only writes the slot's block-table row, length, and the small
+    slot-indexed side state (SSM state, cross-KV).
+    """
+
+    @functools.partial(jax.jit, donate_argnums=(1,), static_argnums=(3,))
+    def insert_fn(side, dst_caches, table_row, slot: int):
+        def ins(dst, src):
+            if dst.ndim == 1:
+                return dst.at[slot].set(src[0])
+            if src.ndim >= 3 and src.shape[2] != dst.shape[2]:
+                pad = [(0, 0)] * src.ndim
+                pad[2] = (0, dst.shape[2] - src.shape[2])
+                fill = -1 if src.dtype == jnp.int32 else 0
+                src = jnp.pad(src, pad, constant_values=fill)
+            return dst.at[:, slot].set(src[:, 0].astype(dst.dtype))
+
+        out = dict(dst_caches)
+        out["ssm"] = jax.tree.map(ins, dst_caches["ssm"], side["ssm"])
+        if dst_caches["cross"] is not None:
+            out["cross"] = jax.tree.map(ins, dst_caches["cross"],
+                                        side["cross"])
+        out["len"] = dst_caches["len"].at[slot].set(side["len"][0])
+        out["pages"] = dst_caches["pages"].at[slot].set(table_row)
+        return out
+
+    return insert_fn
+
+
+def make_page_copy_fn():
+    """Cross-engine P->D page movement: gather the request's pages from
+    the source pool, scatter into the destination pool's allocated pages.
+    O(one request's pages) — never touches the rest of either pool."""
+
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def copy_fn(src_attn, dst_attn, src_ids, dst_ids):
+        def cp(dst, src):
+            return dst.at[:, dst_ids].set(src[:, src_ids].astype(dst.dtype))
+
+        return jax.tree.map(cp, dst_attn, src_attn)
+
+    return copy_fn
 
 
 def make_insert_fn(cfg: ModelConfig):

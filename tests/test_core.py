@@ -118,6 +118,65 @@ def test_choose_group_size_regimes():
     assert g2 > 1
 
 
+def test_choose_group_size_single_layer():
+    # n_layers=1 must always be a single group regardless of regime
+    assert choose_group_size(1, 0.2, 0.5, 0.01) == 1
+    assert choose_group_size(1, 0.001, 0.5, 10.0) == 1
+    # and never exceeds half the stack
+    for n in (2, 3, 5):
+        assert 1 <= choose_group_size(n, 0.001, 5.0, 0.01) <= max(n // 2, 1)
+
+
+def test_kv_plan_single_layer_all_schemes():
+    for scheme in ("one_shot", "layer_wise", "grouped"):
+        p = plan(scheme, n_layers=1, bytes_per_layer=1e6,
+                 per_layer_compute=1e-3, handshake=2e-3, link_bw=1e9)
+        assert len(p.groups) == 1
+        assert p.groups[0].start == 0 and p.groups[0].end == 1
+        assert p.groups[0].nbytes == pytest.approx(1e6)
+
+
+def test_kv_plan_grouped_wire_bound_taper():
+    # wire-bound (t_x >> t_c): grouped must still cover all layers and
+    # taper the final group to a single layer so the exposed tail is the
+    # last layer's KV only.
+    p = plan("grouped", n_layers=32, bytes_per_layer=1e8,
+             per_layer_compute=1e-4, handshake=5e-3, link_bw=1e9)
+    assert p.groups[0].start == 0 and p.groups[-1].end == 32
+    if len(p.groups) > 1:
+        assert p.groups[-1].end - p.groups[-1].start == 1
+    for g1, g2 in zip(p.groups, p.groups[1:]):
+        assert g1.end == g2.start
+
+
+def test_kv_plan_group_size_at_least_n_layers():
+    # explicit group_size >= n_layers degenerates to one group
+    for gsz in (4, 7, 100):
+        p = plan("grouped", n_layers=4, bytes_per_layer=1e6,
+                 per_layer_compute=1e-3, handshake=1e-3, link_bw=1e9,
+                 group_size=gsz)
+        assert len(p.groups) == 1
+        assert (p.groups[0].start, p.groups[0].end) == (0, 4)
+        assert p.groups[0].nbytes == pytest.approx(4e6)
+
+
+def test_kv_plan_page_granularity():
+    # page_bytes rounds each layer's payload up to whole pages, so every
+    # group is page-aligned and the padded payload is >= the raw payload
+    page = 64e3
+    for scheme in ("one_shot", "layer_wise", "grouped"):
+        p = plan(scheme, n_layers=8, bytes_per_layer=1e5,
+                 per_layer_compute=1e-3, handshake=1e-3, link_bw=1e9,
+                 page_bytes=page)
+        for g in p.groups:
+            assert g.nbytes % page == pytest.approx(0.0, abs=1e-6)
+        assert sum(g.nbytes for g in p.groups) >= 8 * 1e5
+    # page_bytes=0 keeps the exact payload (back-compat)
+    p0 = plan("grouped", n_layers=8, bytes_per_layer=1e5,
+              per_layer_compute=1e-3, handshake=1e-3, link_bw=1e9)
+    assert sum(g.nbytes for g in p0.groups) == pytest.approx(8e5)
+
+
 # ---------------------------------------------------------------------------
 # deployments
 # ---------------------------------------------------------------------------

@@ -1,6 +1,8 @@
 """Property-based tests (hypothesis) for system invariants."""
-import hypothesis.strategies as st
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import assume, given, settings
 
 from repro.core.costmodel import V5E, CostModel
