@@ -29,6 +29,10 @@ def main() -> None:
     if only is None or "paged" in only:
         for row in bench_paged_kv():
             print(row)
+    if only is None or "prefix" in only:
+        from benchmarks.prefix_bench import bench_prefix_cache
+        for row in bench_prefix_cache():
+            print(row)
     print(f"# total {time.time() - t_start:.1f}s")
 
 

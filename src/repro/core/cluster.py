@@ -61,18 +61,23 @@ class EPDCluster:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
                  max_len: int = 128, kv_scheme: str = "grouped",
                  hw: Hardware = V5E, paged: bool = False,
-                 page_size: int = 16):
+                 page_size: int = 16, prefix_cache: bool = False,
+                 n_prefill_pool_pages: Optional[int] = None):
         self.cfg = cfg
         self.store = MMStore()
         self.cost = CostModel(cfg, hw,
                               page_tokens=page_size if paged else 0)
         self.kv_scheme = kv_scheme
         self.paged = paged
-        # Prefill engine: batch 1 (prefill is per-request);
+        # Prefill engine: batch 1 (prefill is per-request); carries the
+        # radix prefix cache when enabled (hits skip prefill compute for
+        # the shared pages and the transfer planner charges suffix-only).
         # Decode engine: the continuous-batching instance.
         self.prefill_engine = Engine(cfg, params, max_batch=1,
                                      max_len=max_len, paged=paged,
-                                     page_size=page_size)
+                                     page_size=page_size,
+                                     prefix_cache=prefix_cache,
+                                     n_pool_pages=n_prefill_pool_pages)
         self.decode_engine = Engine(cfg, params, max_batch=max_batch,
                                     max_len=max_len, paged=paged,
                                     page_size=page_size)
@@ -122,11 +127,14 @@ class EPDCluster:
         nbytes = getattr(caches, "kv_nbytes", None)
         if nbytes is None:
             nbytes = cache_nbytes(caches)
+        # prefix-cache hits shrink the prefill the transfer overlaps with:
+        # only the computed suffix counts as per-layer compute.
+        cached = getattr(caches, "cached_tokens", 0)
         p = kv_plan(self.kv_scheme,
                     n_layers=self.cfg.n_layers,
                     bytes_per_layer=nbytes / self.cfg.n_layers,
                     per_layer_compute=self.cost.per_layer_prefill_time(
-                        req.total_prompt_len),
+                        req.total_prompt_len, cached_prefix=cached),
                     handshake=self.cost.hw.handshake,
                     link_bw=self.cost.hw.link_bw,
                     page_bytes=self.cost.kv_page_bytes_per_layer())

@@ -83,15 +83,21 @@ class CostModel:
         t = flops / self._chip_rate(chips, tp)
         return t + self.hw.launch_overhead + self._tp_penalty(tp, self.vit.n_layers)
 
-    def prefill_time(self, prompt_len: int, chips: int = 1, tp: int = 1) -> float:
+    def prefill_time(self, prompt_len: int, chips: int = 1, tp: int = 1,
+                     cached_prefix: float = 0.0) -> float:
+        """One request's prefill. ``cached_prefix`` tokens are served from
+        the prefix cache: linear (MLP/projection) FLOPs cover only the
+        computed suffix, and the quadratic term is suffix queries against
+        the FULL context (cached KV is still attended to)."""
         cfg = self.cfg
         n_active = cfg.active_param_count()
-        flops = 2.0 * n_active * prompt_len
+        computed = max(1.0, prompt_len - max(0.0, cached_prefix))
+        flops = 2.0 * n_active * computed
         attn_layers = len(cfg.attn_layers) or 0
         if attn_layers:
             eff_ctx = prompt_len if cfg.sliding_window is None else min(
                 prompt_len, cfg.sliding_window)
-            flops += 4.0 * attn_layers * prompt_len * eff_ctx * cfg.q_dim
+            flops += 4.0 * attn_layers * computed * eff_ctx * cfg.q_dim
         t_c = flops / self._chip_rate(chips, tp)
         t_m = self.param_bytes() / (chips * self.hw.hbm_bw * self.hw.mbu)
         t = max(t_c, t_m)
@@ -184,5 +190,7 @@ class CostModel:
         return self.kv_bytes(prompt_len) / n_attn
 
     def per_layer_prefill_time(self, prompt_len: int, chips: int = 1,
-                               tp: int = 1) -> float:
-        return self.prefill_time(prompt_len, chips, tp) / self.cfg.n_layers
+                               tp: int = 1,
+                               cached_prefix: float = 0.0) -> float:
+        return self.prefill_time(prompt_len, chips, tp,
+                                 cached_prefix) / self.cfg.n_layers

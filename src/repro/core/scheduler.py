@@ -1,11 +1,20 @@
 """Modality-aware multi-path scheduling + instance-level load balancing
-(paper §3.4).
+(paper §3.4), with cache-aware Prefill dispatch.
 
 The Router keeps a global instance status table (queue length, pending
 work, busy-until estimates) updated by the simulator / engines, routes
 multimodal requests down the E->P->D path and text-only requests down the
 P->D path, and dispatches each stage task to the least-loaded instance
 serving that stage.
+
+Prefill dispatch is additionally *cache-aware* when Prefill instances
+register their prefix caches (``register_prefix_cache``): a cached
+prefix is credited against an instance's load at the same per-token
+weight as pending prefill work, so a text-only request prefers the
+instance holding the longest matching prefix — keeping same-prefix
+requests together compounds the hit rate instead of spraying a hot
+system prompt across every replica — but a deep backlog still spills
+the request to an idle replica rather than pinning one instance.
 """
 from __future__ import annotations
 
@@ -13,7 +22,13 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.core.deployment import Deployment, InstanceSpec
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import Request
+
+
+# load-metric weight of one queued prompt token; cached-prefix tokens
+# are credited at the same weight in cache-aware dispatch
+PENDING_TOKEN_WEIGHT = 1e-3
 
 
 @dataclass
@@ -27,7 +42,7 @@ class InstanceStatus:
     def load(self, now: float) -> float:
         """Scalar load metric for least-loaded-first dispatch."""
         backlog = max(0.0, self.busy_until - now)
-        return (backlog + 1e-3 * self.pending_tokens
+        return (backlog + PENDING_TOKEN_WEIGHT * self.pending_tokens
                 + 0.01 * self.queue_len + 0.002 * self.active_decode)
 
 
@@ -36,16 +51,40 @@ class Router:
         self.deployment = deployment
         self.status: Dict[str, InstanceStatus] = {
             i.name: InstanceStatus(i) for i in deployment.instances}
+        self.prefix_caches: Dict[str, PrefixCache] = {}
+        # cache-aware Prefill dispatch; False = pure least-loaded (the
+        # ablation baseline — prefix caches still populate and count hits)
+        self.cache_aware = True
 
     # -- multi-path routing ----------------------------------------------------
     def path(self, req: Request) -> List[str]:
         """Stage path for a request: E->P->D for multimodal, P->D for text."""
         return ["E", "P", "D"] if req.is_multimodal else ["P", "D"]
 
-    def pick(self, stage: str, now: float,
-             prefer: Optional[str] = None) -> InstanceStatus:
-        """Least-loaded instance serving `stage`. ``prefer`` pins affinity
-        (e.g. keep P and D on the same instance when it serves both)."""
+    def register_prefix_cache(self, name: str, cache: PrefixCache) -> None:
+        """Make instance ``name``'s prefix cache visible to dispatch —
+        enables cache-aware Prefill routing for text-only requests."""
+        if name not in self.status:
+            raise KeyError(f"unknown instance {name}")
+        self.prefix_caches[name] = cache
+
+    def cached_prefix_tokens(self, name: str, req: Request) -> int:
+        """Tokens of ``req``'s prompt cached on instance ``name`` (full
+        pages only — what a prefill there could actually skip)."""
+        cache = self.prefix_caches.get(name)
+        if cache is None or req.is_multimodal:
+            return 0
+        n = cache.match_len(req.prompt_tokens, cap=len(req.prompt_tokens) - 1)
+        return (n // cache.page) * cache.page
+
+    def pick(self, stage: str, now: float, prefer: Optional[str] = None,
+             req: Optional[Request] = None) -> InstanceStatus:
+        """Dispatch an instance serving ``stage``. ``prefer`` pins affinity
+        (e.g. keep P and D on the same instance when it serves both).
+        For Prefill with registered prefix caches and a text-only ``req``,
+        cached-prefix tokens are credited against load at the pending-
+        token weight: the longest match wins among comparably loaded
+        instances, but never outweighs a deep backlog."""
         cands = [self.status[i.name]
                  for i in self.deployment.stage_instances(stage)]
         if not cands:
@@ -55,6 +94,11 @@ class Router:
             for c in cands:
                 if c.spec.name == prefer:
                     return c
+        if (stage == "P" and req is not None and self.prefix_caches
+                and self.cache_aware):
+            return min(cands, key=lambda c: c.load(now) -
+                       PENDING_TOKEN_WEIGHT *
+                       self.cached_prefix_tokens(c.spec.name, req))
         return min(cands, key=lambda c: c.load(now))
 
     # -- status updates (called by the execution layer) --------------------------

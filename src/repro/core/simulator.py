@@ -55,6 +55,11 @@ class DatasetSpec:
     text_tokens_mean: float
     output_tokens: int = 64
     unique_images: int = 0        # 0 => every image unique (no dedup hits)
+    # shared-prefix workload (system prompts / few-shot templates):
+    # each request prepends one of `prefix_groups` shared prefixes of
+    # `prefix_tokens` tokens to its (unique) tail. 0 => no shared prefixes.
+    prefix_groups: int = 0
+    prefix_tokens: int = 0
 
 
 # paper §4.1
@@ -81,8 +86,18 @@ def gen_requests(spec: DatasetSpec, n: int, rate: float,
                       if spec.unique_images else i)
             payload = f"{spec.name}-img-{img_id}".encode()
             ntok = mm_tokens
+        if spec.prefix_groups:
+            g = rng.randrange(spec.prefix_groups)
+            prompt = ([1_000_000 + g * spec.prefix_tokens + j
+                       for j in range(spec.prefix_tokens)]
+                      + [2_000_000 + i * 1024 + j for j in range(text_len)])
+        else:
+            # per-request-unique tokens: without them every prompt would
+            # be a literal prefix of every longer one and a prefix-cache
+            # run over a legacy dataset would report phantom hits
+            prompt = [2_000_000 + i * 1024 + j for j in range(text_len)]
         reqs.append(Request(
-            prompt_tokens=list(range(text_len)),
+            prompt_tokens=prompt,
             max_new_tokens=spec.output_tokens,
             mm_payload=payload, mm_tokens=ntok, t_arrival=t))
     return reqs
@@ -101,6 +116,14 @@ class SimConfig:
     replicas: int = 1
     hw: Hardware = V5E
     kv_page_tokens: int = 0             # paged KV pool page size (0 = dense)
+    # per-Prefill-instance radix prefix caches + cache-aware routing;
+    # prefill service time then covers only the uncached suffix.
+    prefix_cache: bool = False
+    cache_aware_routing: bool = True    # False: least-loaded only (ablation)
+    # capacity of each pool-less sim tree (tokens, LRU-evicted): models a
+    # bounded KV pool and keeps long simulations from growing one radix
+    # node per unique prompt tail forever
+    prefix_cache_tokens: int = 65536
 
 
 @dataclass
@@ -116,6 +139,7 @@ class SimMetrics:
     throughput_tok_s: float            # all output tokens / makespan
     store_hit_rate: float
     ep_overlap_ratio: float
+    prefix_hit_rate: float = 0.0       # cached prefill tokens / text tokens
 
     def slo_attainment(self, ttft_ms: float, tpot_ms: float) -> float:
         ok = sum(r.meets_slo(ttft_ms, tpot_ms) for r in self.requests)
@@ -192,8 +216,10 @@ class _Instance:
                 req.t_encode_start = loop.now
                 loop.after(dur, lambda: self._finish_encode(req))
             else:
+                cached = self._prefix_lookup(req)
                 dur = sim.cost.prefill_time(req.total_prompt_len,
-                                            self.spec.chips, self.spec.tp)
+                                            self.spec.chips, self.spec.tp,
+                                            cached_prefix=cached)
                 dur *= self._interference("P")
                 req.t_prefill_start = loop.now
                 self._start_prefill(req, dur)
@@ -210,6 +236,22 @@ class _Instance:
             sim.router.on_busy_until(self.spec.name, loop.now + dur)
         else:
             self.busy, self.running_stage = False, None
+
+    def _prefix_lookup(self, req: Request) -> float:
+        """Cached-prefix tokens on THIS instance's radix tree (full pages
+        only), recording hit stats and retaining the prompt for future
+        requests. 0 for multimodal prompts (token-keyed cache)."""
+        sim = self.sim
+        cache = sim.router.prefix_caches.get(self.spec.name)
+        if cache is None or req.is_multimodal:
+            return 0.0
+        m = cache.match_and_ref(req.prompt_tokens,
+                                cap=len(req.prompt_tokens) - 1)
+        cached = (m.n_tokens // cache.page) * cache.page
+        cache.insert(req.prompt_tokens)
+        sim.prefix_hit_tokens += cached
+        sim.prefix_prompt_tokens += len(req.prompt_tokens)
+        return float(cached)
 
     # ---- stage completions ----
     def _finish_encode(self, req: Request) -> None:
@@ -293,6 +335,18 @@ class Simulator:
                           for s in self.deployment.instances}
         self.done: List[Request] = []
         self.kv_plans: list = []
+        self.prefix_hit_tokens = 0.0
+        self.prefix_prompt_tokens = 0.0
+        if cfg.prefix_cache:
+            from repro.serving.prefix_cache import PrefixCache
+            page = cfg.kv_page_tokens or 16
+            self.router.cache_aware = cfg.cache_aware_routing
+            for s in self.deployment.instances:
+                if s.serves("P"):
+                    self.router.register_prefix_cache(
+                        s.name,
+                        PrefixCache(page,
+                                    max_tokens=cfg.prefix_cache_tokens))
 
     # ---- routing hooks ----
     def pick_decode_instance(self, req: Request, prefer: str) -> _Instance:
@@ -314,7 +368,7 @@ class Simulator:
             st = self.router.pick("E", self.loop.now)
             self.instances[st.spec.name].enqueue("E", req)
         else:
-            st = self.router.pick("P", self.loop.now)
+            st = self.router.pick("P", self.loop.now, req=req)
             self.instances[st.spec.name].enqueue("P", req)
 
     def finish_encode(self, inst: _Instance, req: Request) -> float:
@@ -329,7 +383,8 @@ class Simulator:
         st = self.router.pick("P", self.loop.now,
                               prefer=(from_instance.spec.name
                                       if from_instance is not None and
-                                      from_instance.spec.serves("P") else None))
+                                      from_instance.spec.serves("P") else None),
+                              req=req)
         inst = self.instances[st.spec.name]
         if from_instance is inst:
             inst.enqueue("P", req)           # same instance: no transfer
@@ -366,6 +421,8 @@ class Simulator:
             throughput_tok_s=toks / makespan if makespan > 0 else 0.0,
             store_hit_rate=self.store.stats.hit_rate,
             ep_overlap_ratio=self.prefetcher.mean_overlap_ratio,
+            prefix_hit_rate=(self.prefix_hit_tokens / self.prefix_prompt_tokens
+                             if self.prefix_prompt_tokens else 0.0),
         )
 
 
@@ -374,7 +431,9 @@ def simulate(model: ModelConfig, deployment: str, dataset: DatasetSpec,
              kv_scheme: str = "grouped", ep_async: bool = True,
              replicas: int = 1, hw: Hardware = V5E,
              per_chip_rate: bool = False,
-             kv_page_tokens: int = 0) -> SimMetrics:
+             kv_page_tokens: int = 0,
+             prefix_cache: bool = False,
+             cache_aware_routing: bool = True) -> SimMetrics:
     """Run one deployment against a trace injected at ``rate`` req/s.
 
     per_chip_rate=True multiplies the rate by the deployment's chip count
@@ -385,7 +444,9 @@ def simulate(model: ModelConfig, deployment: str, dataset: DatasetSpec,
     """
     cfg = SimConfig(deployment=deployment, kv_scheme=kv_scheme,
                     ep_async=ep_async, replicas=replicas, hw=hw,
-                    kv_page_tokens=kv_page_tokens)
+                    kv_page_tokens=kv_page_tokens,
+                    prefix_cache=prefix_cache,
+                    cache_aware_routing=cache_aware_routing)
     sim = Simulator(model, cfg)
     if per_chip_rate:
         rate = rate * sim.deployment.n_chips

@@ -121,7 +121,9 @@ def attention_block(p, x, positions, cfg: ModelConfig, *, window=None,
                     cache: Optional[Tuple[jax.Array, ...]] = None,
                     cur_len: Optional[jax.Array] = None,
                     causal: bool = True,
-                    pages: Optional[jax.Array] = None):
+                    pages: Optional[jax.Array] = None,
+                    prefix_len: Optional[jax.Array] = None,
+                    pos_base: Optional[jax.Array] = None):
     """One self-attention sub-block with residual.
 
     cache: per-repeat cache views. Dense: (k_cache, v_cache, kv_pos) —
@@ -134,6 +136,14 @@ def attention_block(p, x, positions, cfg: ModelConfig, *, window=None,
       (n_pages, page, nkv, hd). Decode writes one token into its slot's
       current page; prefill scatters the sequence's pages into the pool
       (tokens past a slot's mapped pages land on the trash page 0).
+    prefix_len / pos_base: SUFFIX prefill against a cached prefix (the
+      prefix-cache hit path, batch 1). The first ``prefix_len`` tokens of
+      the sequence already sit in pool pages mapped by the block table;
+      ``x`` holds only the tokens from the page-aligned ``pos_base``
+      onward (entries below ``prefix_len`` are dummies with position -1).
+      Queries attend to the gathered prefix KV plus the in-batch suffix,
+      and the scatter is masked per token so the copied-on-write partial
+      page keeps its prefix tokens.
     Returns (out, new_cache_views_or_None).
     """
     h = rms_norm(x, p["norm"], cfg.norm_eps)
@@ -169,7 +179,7 @@ def attention_block(p, x, positions, cfg: ModelConfig, *, window=None,
             new_cache = (ck, cv)
             out = K.paged_attention(q[:, 0], ck, cv, pages, pos + 1,
                                     window=window)[:, None]
-        else:
+        elif prefix_len is None:
             # prefill: scatter the (padded) sequence's pages into the pool
             S = k.shape[1]
             if S % page:
@@ -185,6 +195,41 @@ def attention_block(p, x, positions, cfg: ModelConfig, *, window=None,
             cv = cv.at[flat].set(vp.astype(cv.dtype))
             new_cache = (ck, cv)
             out = K.attention(q, k, v, positions, positions, window=window)
+        else:
+            # ---- suffix prefill against a cached prefix (batch 1) ----
+            S = k.shape[1]
+            if S % page:
+                raise ValueError(
+                    f"paged prefill length {S} not a multiple of page {page}")
+            if b != 1:
+                raise ValueError("suffix prefill is batch-1 only")
+            npg = S // page
+            start = (pos_base // page).astype(jnp.int32)
+            row = jax.lax.dynamic_slice(pages, (0, start), (b, npg))
+            flat = row.reshape(-1)
+            kp = k.reshape(b * npg, page, *k.shape[2:]).astype(ck.dtype)
+            vp = v.reshape(b * npg, page, *v.shape[2:]).astype(cv.dtype)
+            # token-masked scatter: dummy positions (the CoW page's copied
+            # prefix tokens and the right padding) keep the pool's values
+            keep = (positions >= 0).reshape(b * npg, page)[..., None, None]
+            ck = ck.at[flat].set(jnp.where(keep, kp, ck[flat]))
+            cv = cv.at[flat].set(jnp.where(keep, vp, cv[flat]))
+            new_cache = (ck, cv)
+            # gather the cached prefix through the whole block-table row;
+            # slots at/after prefix_len are masked out (suffix attention
+            # runs over the in-batch k/v, unmapped slots hit trash page 0)
+            width = pages.shape[1]
+            pk = ck[pages.reshape(-1)].reshape(b, width * page, *k.shape[2:])
+            pv = cv[pages.reshape(-1)].reshape(b, width * page, *v.shape[2:])
+            span = jnp.arange(width * page, dtype=jnp.int32)[None]
+            pfx_pos = jnp.where(span < prefix_len, span, -1)
+            k_all = jnp.concatenate([pk.astype(q.dtype), k], axis=1)
+            v_all = jnp.concatenate([pv.astype(q.dtype), v], axis=1)
+            kv_pos = jnp.concatenate(
+                [jnp.broadcast_to(pfx_pos, (b, width * page)), positions],
+                axis=1)
+            out = K.attention(q, k_all, v_all, positions, kv_pos,
+                              window=window)
     elif cache is not None:
         ck, cv, cpos = cache
         S = ck.shape[1]

@@ -83,23 +83,42 @@ def train_forward(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
 
 def prefill_forward(params, cfg: ModelConfig, tokens, caches,
                     *, lengths: Optional[jax.Array] = None,
-                    mm_embeds=None, enc_frames=None):
+                    mm_embeds=None, enc_frames=None,
+                    prefix_len: Optional[jax.Array] = None,
+                    pos_base: Optional[jax.Array] = None):
     """Populate caches from a (padded) prompt batch.
 
     lengths: (B,) true prompt lengths (including mm tokens). Padded
     positions get position -1 so they are masked everywhere.
+    prefix_len / pos_base (paged suffix prefill, batch 1): the first
+    ``prefix_len`` tokens are already cached in pool pages; ``tokens``
+    holds only the slice from the page-aligned ``pos_base`` onward (the
+    leading ``prefix_len - pos_base`` entries are dummies). Queries get
+    absolute positions, attend over gathered-prefix + in-batch KV, and
+    the returned logits are still for the true last prompt token.
     Returns (last_token_logits (B,vocab), new_caches).
     """
     x, positions = T.embed_inputs(params, cfg, tokens, mm_embeds)
-    if lengths is not None:
+    if prefix_len is not None:
+        if lengths is None:
+            raise ValueError("suffix prefill requires lengths")
+        idx = jnp.arange(x.shape[1], dtype=jnp.int32)[None]
+        abspos = pos_base.astype(jnp.int32) + idx
+        valid = (abspos >= prefix_len) & (abspos < lengths[:, None])
+        positions = jnp.where(valid, abspos, -1)
+    elif lengths is not None:
         idx = jnp.arange(x.shape[1], dtype=jnp.int32)[None]
         positions = jnp.where(idx < lengths[:, None], idx, -1)
     enc_out = None
     if cfg.encoder is not None:
         enc_out = T.run_encoder(params, cfg, enc_frames)
     h, new_caches, _ = T.run_decoder(params, cfg, x, positions, caches=caches,
-                                     enc_out=enc_out)
-    if lengths is not None:
+                                     enc_out=enc_out, prefix_len=prefix_len,
+                                     pos_base=pos_base)
+    if prefix_len is not None:
+        last = jnp.clip(lengths - 1 - pos_base.astype(jnp.int32), 0)
+        new_caches["len"] = lengths
+    elif lengths is not None:
         last = jnp.clip(lengths - 1, 0)
         new_caches["len"] = lengths
     else:

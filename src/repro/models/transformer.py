@@ -220,12 +220,17 @@ def run_encoder(params, cfg: ModelConfig, frames):
 def run_decoder(params, cfg: ModelConfig, x, positions, *,
                 caches: Optional[Dict[str, Any]] = None,
                 enc_out: Optional[Tuple[jax.Array, jax.Array]] = None,
-                remat: bool = False):
+                remat: bool = False,
+                prefix_len: Optional[jax.Array] = None,
+                pos_base: Optional[jax.Array] = None):
     """Run all decoder layers.
 
     caches: cache pytree from make_caches (serving) or None (training).
     enc_out: (enc_hidden, enc_pos) — only during prefill/training of an
       enc-dec arch; during decode the cross-KV comes from caches['cross'].
+    prefix_len / pos_base: paged suffix-prefill against a cached prefix
+      (see layers.attention_block) — x covers positions from the
+      page-aligned ``pos_base`` only.
     Returns (h, new_caches, aux_loss).
     """
     pat = cfg.pattern
@@ -246,7 +251,8 @@ def run_decoder(params, cfg: ModelConfig, x, positions, *,
                 h, nc = L.attention_block(
                     p["attn"], h, positions, cfg, window=window,
                     cache=tuple(attn_c[i]) if attn_c[i] is not None else None,
-                    cur_len=cur_len, pages=pages)
+                    cur_len=cur_len, pages=pages,
+                    prefix_len=prefix_len, pos_base=pos_base)
                 new_attn.append(attn_cls(*nc) if nc is not None else None)
                 if cfg.encoder is not None:
                     if decode:

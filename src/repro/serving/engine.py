@@ -11,11 +11,21 @@ Two KV layouts:
 * dense (default) — per-slot contiguous caches (batch, max_len, ...);
   insert copies the request's whole cache row into its slot.
 * paged (``paged=True``) — attention KV lives in a shared page pool with
-  per-slot block tables (serving.kv_pool). Prefill writes straight into
-  pool pages, so insert on the SAME engine is a pure block-table handoff
-  (zero KV bytes moved) and insert from ANOTHER engine moves only the
-  request's pages. Decode attention gathers KV through the block table
-  with per-slot length masking, so HBM traffic tracks actual lengths.
+  per-slot block tables (serving.kv_pool, ref-counted pages). Prefill
+  writes straight into pool pages, so insert on the SAME engine is a pure
+  block-table handoff (zero KV bytes moved) and insert from ANOTHER
+  engine moves only the request's pages. Decode attention gathers KV
+  through the block table with per-slot length masking, so HBM traffic
+  tracks actual lengths.
+* paged + ``prefix_cache=True`` — a radix-tree prefix cache
+  (serving.prefix_cache) indexes pool pages by their token content.
+  ``prefill_request`` reuses the longest cached prefix by ref-counting
+  its shared pages into the request's block table and computes only the
+  unshared suffix; a match ending inside a page is copied on write so
+  shared pages are never mutated. Finished prefills are retained in the
+  tree and evicted LRU under pool pressure. Requires an attention-only
+  decoder (no SSM state / cross-attention to reconstruct mid-sequence)
+  and applies to text-only requests.
 
 The EPD disaggregation layer (repro.core) drives one or more Engines: the
 Encode stage produces features into the MM Store, Prefill engines run
@@ -24,7 +34,7 @@ via ``insert`` and run ``decode_step``.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,10 +44,11 @@ from repro.configs.base import ModelConfig
 from repro.models import frontend as FE
 from repro.models.transformer import make_caches
 from repro.serving.kv_pool import PagePool, PagedKVPayload
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import Request
 from repro.serving.steps import (make_decode_fn, make_insert_fn,
                                  make_page_copy_fn, make_paged_insert_fn,
-                                 make_prefill_fn)
+                                 make_pool_page_copy_fn, make_prefill_fn)
 
 
 class Engine:
@@ -45,7 +56,8 @@ class Engine:
                  max_len: int = 128, temperature: float = 0.0,
                  cache_dtype=jnp.float32, kv_dtype=None,
                  paged: bool = False, page_size: int = 16,
-                 n_pool_pages: Optional[int] = None):
+                 n_pool_pages: Optional[int] = None,
+                 prefix_cache: bool = False):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -73,10 +85,22 @@ class Engine:
             self._copy_pages = make_page_copy_fn()
             self._slot_pages: List[Optional[np.ndarray]] = [None] * max_batch
         else:
+            if prefix_cache:
+                raise ValueError("prefix_cache requires paged=True")
             self._prefill = make_prefill_fn(cfg)
             self._insert = make_insert_fn(cfg)
             self.caches = make_caches(cfg, max_batch, max_len,
                                       dtype=cache_dtype, kv_dtype=kv_dtype)
+        self.prefix_cache: Optional[PrefixCache] = None
+        if prefix_cache:
+            if cfg.encoder is not None or cfg.ssm_layers:
+                raise ValueError(
+                    "prefix_cache needs an attention-only decoder: SSM "
+                    "state / cross-KV cannot be resumed mid-sequence")
+            self.prefix_cache = PrefixCache(page_size, self.pool)
+            self._prefill_suffix = make_prefill_fn(cfg, donate_caches=True,
+                                                   prefix=True)
+            self._cow_copy = make_pool_page_copy_fn()
         self.slots: List[Optional[Request]] = [None] * max_batch
         self._last_tok = np.zeros((max_batch,), np.int32)
         self._key = jax.random.PRNGKey(0)
@@ -84,6 +108,10 @@ class Engine:
         # paged-vs-dense P->D handoff metric (benchmarks, acceptance).
         self.kv_insert_bytes = 0
         self.kv_insert_bytes_total = 0
+        # prefill work accounting: tokens the model actually computed vs
+        # tokens requested — the prefix-cache savings metric.
+        self.prefill_tokens_total = 0
+        self.prefill_tokens_computed = 0
 
     # -- capacity ------------------------------------------------------------
     def free_slots(self) -> List[int]:
@@ -105,12 +133,46 @@ class Engine:
             n += 2 * (e.k.size // e.k.shape[1]) * e.k.dtype.itemsize
         return int(n)
 
+    # -- paged-pool helpers ---------------------------------------------------
+    def _alloc_pages(self, n: int) -> np.ndarray:
+        """Pool alloc with prefix-cache backpressure: on exhaustion, evict
+        LRU tree retentions until the request fits, then retry."""
+        try:
+            return self.pool.alloc(n)
+        except RuntimeError:
+            if self.prefix_cache is None:
+                raise
+            self.prefix_cache.evict(n - self.pool.n_free)
+            return self.pool.alloc(n)
+
+    def _side_caches(self):
+        return make_caches(self.cfg, 1, self.max_len, dtype=self.cache_dtype,
+                           kv_dtype=self.kv_dtype, with_attn=False)
+
+    def page_holders(self) -> List[Sequence[int]]:
+        """Every holder of pool pages this engine knows about: one entry
+        per active slot plus the prefix-cache retentions (leak audits)."""
+        holders: List[Sequence[int]] = [
+            p for p in self._slot_pages if p is not None]
+        if self.prefix_cache is not None:
+            holders.append(self.prefix_cache.retained_pages())
+        return holders
+
+    def assert_no_page_leaks(self, extra_holders: Sequence = ()) -> None:
+        """Pool leak audit: every used page must be accounted for by an
+        active slot, the radix tree, or a caller-supplied holder (e.g. an
+        un-inserted payload), with exact per-page ref counts."""
+        self.pool.assert_balanced([*self.page_holders(), *extra_holders])
+
     # -- stages --------------------------------------------------------------
     def prefill_request(self, req: Request, mm_embeds=None,
                         enc_frames=None):
         """Run Prefill for one request (batch=1). Returns (first_token,
         payload) — the payload is the P->D handoff unit: the prefilled
-        cache pytree (dense) or a PagedKVPayload naming pool pages."""
+        cache pytree (dense) or a PagedKVPayload naming pool pages.
+
+        With the prefix cache enabled, text-only prompts reuse the
+        longest cached prefix and compute only the suffix."""
         cfg = self.cfg
         n_mm = 0
         if mm_embeds is not None and cfg.encoder is None:
@@ -120,24 +182,30 @@ class Engine:
         if pad < 0:
             raise ValueError(
                 f"prompt ({toks.shape[1]}+{n_mm}) exceeds max_len {self.max_len}")
-        toks = np.pad(toks, ((0, 0), (0, pad)))
         n_tokens = len(req.prompt_tokens) + n_mm
         lengths = jnp.asarray([n_tokens], jnp.int32)
         if not self.paged:
+            toks = np.pad(toks, ((0, 0), (0, pad)))
             caches = make_caches(cfg, 1, self.max_len, dtype=self.cache_dtype,
                                  kv_dtype=self.kv_dtype)
             logits, caches = self._prefill(self.params, jnp.asarray(toks),
                                            lengths, caches, mm_embeds,
                                            enc_frames)
             first = int(jnp.argmax(logits[0]))
+            self.prefill_tokens_total += n_tokens
+            self.prefill_tokens_computed += n_tokens
             return first, caches
 
+        if (self.prefix_cache is not None and n_mm == 0
+                and mm_embeds is None and enc_frames is None):
+            return self._prefill_with_prefix(req, n_tokens, lengths)
+
         # ---- paged: write KV straight into this engine's pool pages ----
-        ids = self.pool.alloc(self.pool.pages_for(n_tokens))
+        toks = np.pad(toks, ((0, 0), (0, pad)))
+        ids = self._alloc_pages(self.pool.pages_for(n_tokens))
         row = np.zeros((1, self.max_len // self.page_size), np.int32)
         row[0, :len(ids)] = ids
-        side = make_caches(cfg, 1, self.max_len, dtype=self.cache_dtype,
-                           kv_dtype=self.kv_dtype, with_attn=False)
+        side = self._side_caches()
         pcaches = {"attn": self.caches["attn"], "ssm": side["ssm"],
                    "cross": side["cross"], "len": side["len"],
                    "pages": jnp.asarray(row)}
@@ -145,11 +213,74 @@ class Engine:
                                     pcaches, mm_embeds, enc_frames)
         self.caches["attn"] = new["attn"]      # pool pages updated in place
         first = int(jnp.argmax(logits[0]))
+        self.prefill_tokens_total += n_tokens
+        self.prefill_tokens_computed += n_tokens
         payload = PagedKVPayload(
             source=self, page_ids=ids, n_tokens=n_tokens,
             side={"ssm": new["ssm"], "cross": new["cross"],
                   "len": new["len"]},
             kv_nbytes=len(ids) * self._attn_kv_nbytes(self.caches["attn"]))
+        return first, payload
+
+    def _prefill_with_prefix(self, req: Request, n_tokens: int, lengths):
+        """Prefix-cache hit path: ref shared pages, CoW a partially
+        matched page, prefill only the suffix from the page-aligned match
+        offset, then retain the new full pages in the radix tree."""
+        page = self.page_size
+        # cap at n-1 so at least one token is computed (we need logits)
+        m = self.prefix_cache.match_and_ref(req.prompt_tokens,
+                                            cap=n_tokens - 1)
+        n_shared = m.n_full_pages
+        pos_base = n_shared * page
+        left_pad = m.n_tokens - pos_base          # matched tokens in CoW page
+        suffix = req.prompt_tokens[m.n_tokens:]
+        S = -(-(left_pad + len(suffix)) // page) * page
+        new_ids = None
+        cow_held = m.cow_src is not None
+        try:
+            new_ids = self._alloc_pages(S // page)
+            if m.cow_src is not None:
+                # never write a shared page: private copy, then overwrite
+                # its unmatched tail during the suffix scatter
+                self.caches["attn"] = self._cow_copy(
+                    self.caches["attn"], jnp.asarray([m.cow_src], jnp.int32),
+                    jnp.asarray([int(new_ids[0])], jnp.int32))
+                self.pool.unref([m.cow_src])
+                cow_held = False
+            row = np.zeros((1, self.max_len // page), np.int32)
+            row[0, :n_shared] = m.page_ids
+            row[0, n_shared:n_shared + len(new_ids)] = new_ids
+            sfx = np.zeros((1, S), np.int32)
+            sfx[0, left_pad:left_pad + len(suffix)] = suffix
+            side = self._side_caches()
+            pcaches = {"attn": self.caches["attn"], "ssm": side["ssm"],
+                       "cross": side["cross"], "len": side["len"],
+                       "pages": jnp.asarray(row)}
+            logits, new = self._prefill_suffix(
+                self.params, jnp.asarray(sfx), lengths, pcaches,
+                jnp.asarray(m.n_tokens, jnp.int32),
+                jnp.asarray(pos_base, jnp.int32))
+        except BaseException:
+            # un-wind every ref this request took (match, CoW source,
+            # fresh pages) so a failed prefill leaks nothing
+            self.pool.unref(m.page_ids)
+            if cow_held:
+                self.pool.unref([m.cow_src])
+            if new_ids is not None:
+                self.pool.unref(new_ids)
+            raise
+        self.caches["attn"] = new["attn"]
+        first = int(jnp.argmax(logits[0]))
+        ids = np.asarray(row[0, :n_shared + len(new_ids)], np.int32)
+        self.prefix_cache.insert(req.prompt_tokens, ids)
+        self.prefill_tokens_total += n_tokens
+        self.prefill_tokens_computed += n_tokens - m.n_tokens
+        payload = PagedKVPayload(
+            source=self, page_ids=ids, n_tokens=n_tokens,
+            side={"ssm": new["ssm"], "cross": new["cross"],
+                  "len": new["len"]},
+            kv_nbytes=len(ids) * self._attn_kv_nbytes(self.caches["attn"]),
+            cached_tokens=m.n_tokens)
         return first, payload
 
     def insert(self, req: Request, prefilled, first_token: int) -> int:
@@ -192,7 +323,7 @@ class Engine:
             ids = payload.page_ids               # zero-copy handoff
             self.kv_insert_bytes = 0
         else:
-            ids = self.pool.alloc(payload.n_pages)
+            ids = self._alloc_pages(payload.n_pages)
             self.caches["attn"] = self._copy_pages(
                 payload.source.caches["attn"], self.caches["attn"],
                 jnp.asarray(payload.page_ids), jnp.asarray(ids))
@@ -204,6 +335,10 @@ class Engine:
         self.caches = self._insert_side(payload.side, self.caches,
                                         jnp.asarray(row), slot)
         self._slot_pages[slot] = np.asarray(ids)
+        # neutralize the payload: its refs now belong to the slot, so a
+        # stray release_payload must be a no-op, not an unref of pages a
+        # live slot (or the prefix tree) still owns
+        payload.page_ids = np.zeros((0,), np.int32)
 
     def _grow_pages(self, lens: np.ndarray) -> None:
         """Map a fresh page for any slot whose next token crosses a page
@@ -224,7 +359,7 @@ class Engine:
                 demand.append((i, have, need - have))
         if not demand:
             return
-        ids = self.pool.alloc(sum(n for _, _, n in demand))  # atomic
+        ids = self._alloc_pages(sum(n for _, _, n in demand))  # atomic
         updates: List[Tuple[int, int, int]] = []
         off = 0
         for i, have, n in demand:

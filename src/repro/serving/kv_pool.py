@@ -1,26 +1,36 @@
-"""Paged KV-cache page pool (vLLM-style block allocator).
+"""Paged KV-cache page pool (vLLM-style block allocator, ref-counted).
 
 The device-side KV pool is a flat array of fixed-size pages shared by
 every decode slot: ``(n_repeats, n_pages, page_size, n_kv, head_dim)``
 per attention pattern position (see ``layers.PagedAttnCache``). This
 module is the HOST-side bookkeeping around it:
 
-* :class:`PagePool` — a free-list allocator over physical page ids.
-  Physical page 0 is reserved as the *trash page*: unmapped block-table
-  entries point at it, so decode writes from inactive slots and prefill
-  writes past a request's last page land somewhere harmless instead of
-  corrupting live pages.
+* :class:`PagePool` — a ref-counted free-list allocator over physical
+  page ids. ``alloc`` hands out pages at refcount 1; ``ref`` adds a
+  holder (prefix sharing: the radix tree and every request retaining a
+  shared prompt page each hold one ref); ``free``/``unref`` drops one
+  and returns the page to the free list only when the last holder lets
+  go. Physical page 0 is reserved as the *trash page*: unmapped
+  block-table entries point at it, so decode writes from inactive slots
+  and prefill writes past a request's last page land somewhere harmless
+  instead of corrupting live pages.
 * :class:`PagedKVPayload` — the P->D handoff unit. Instead of a full
   cache pytree it names the request's physical pages in the *source*
   engine's pool plus the small per-slot side state (SSM state, cross-KV,
   length). Inserting into the same engine is a pure block-table update
   (zero KV bytes moved); inserting into another engine gathers/scatters
-  only those pages — O(one request's pages), never O(pool).
+  only those pages — O(one request's pages), never O(pool). Payload
+  pages may be shared (prefix-cache hits): the payload holds ONE ref per
+  page, released on insert-into-another-engine or ``release_payload``.
+
+Leak auditing: ``assert_balanced`` cross-checks the allocator against
+the holders the caller believes exist (slots, radix-tree retentions) —
+engine/cluster tests call it after draining.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Sequence
+from typing import Any, Dict, Iterable, List, Sequence
 
 import numpy as np
 
@@ -33,10 +43,12 @@ def pages_for(n_tokens: int, page_size: int) -> int:
 
 
 class PagePool:
-    """Free-list allocator over the physical pages of one engine's pool.
+    """Ref-counted allocator over the physical pages of one engine's pool.
 
     Page ids are ints in [1, n_pages); page 0 is the reserved trash page
-    and is never handed out.
+    and is never handed out. A page is *used* while any holder refs it;
+    ``_refs`` doubles as the O(1) membership check that used to scan the
+    free list (the old O(n^2) double-free check).
     """
 
     def __init__(self, n_pages: int, page_size: int):
@@ -49,6 +61,7 @@ class PagePool:
         # LIFO free list: recently freed pages are re-used first (their
         # contents are most likely still resident in cache hierarchies).
         self._free: List[int] = list(range(n_pages - 1, 0, -1))
+        self._refs: Dict[int, int] = {}
 
     @property
     def n_free(self) -> int:
@@ -61,39 +74,92 @@ class PagePool:
     def pages_for(self, n_tokens: int) -> int:
         return pages_for(n_tokens, self.page_size)
 
+    def refcount(self, page: int) -> int:
+        return self._refs.get(int(page), 0)
+
     def alloc(self, n: int) -> np.ndarray:
-        """Pop ``n`` physical page ids; raises RuntimeError when exhausted."""
+        """Pop ``n`` physical page ids at refcount 1; raises RuntimeError
+        when exhausted."""
+        if n <= 0:
+            return np.zeros((0,), np.int32)
         if n > len(self._free):
             raise RuntimeError(
                 f"KV page pool exhausted: requested {n} pages, "
                 f"{len(self._free)}/{self.n_pages - 1} free")
         out = self._free[-n:][::-1]
         del self._free[-n:]
+        for p in out:
+            self._refs[p] = 1
         return np.asarray(out, np.int32)
 
+    def ref(self, pages: Sequence[int]) -> None:
+        """Add one holder to each (already-allocated) page."""
+        for p in pages:
+            p = int(p)
+            if p not in self._refs:
+                raise ValueError(f"ref of unallocated page {p}")
+            self._refs[p] += 1
+
     def free(self, pages: Sequence[int]) -> None:
+        """Drop one holder per page; a page returns to the free list when
+        its last holder releases it (``unref`` is an alias)."""
         for p in pages:
             p = int(p)
             if p == TRASH_PAGE:
                 raise ValueError("cannot free the reserved trash page")
             if not (0 < p < self.n_pages):
                 raise ValueError(f"page id {p} out of range")
-            if p in self._free:
+            if p not in self._refs:
                 raise ValueError(f"double free of page {p}")
-            self._free.append(p)
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                del self._refs[p]
+                self._free.append(p)
+
+    unref = free
+
+    def assert_balanced(self, holders: Iterable[Sequence[int]] = ()) -> None:
+        """Leak assertion: the allocator's view must match the holders the
+        caller knows about (each element of ``holders`` is one holder's
+        page-id list — a slot's block-table row, a payload, the radix
+        tree's retained pages). Raises AssertionError on any leaked page,
+        ref-count mismatch, or free-list corruption."""
+        expect: Dict[int, int] = {}
+        for h in holders:
+            for p in h:
+                p = int(p)
+                if p != TRASH_PAGE:
+                    expect[p] = expect.get(p, 0) + 1
+        assert len(self._free) + len(self._refs) == self.n_pages - 1, (
+            f"pool accounting broken: {len(self._free)} free + "
+            f"{len(self._refs)} used != {self.n_pages - 1}")
+        assert len(set(self._free)) == len(self._free), \
+            "free list contains duplicates"
+        assert not (set(self._free) & set(self._refs)), \
+            "page both free and referenced"
+        leaked = {p: r for p, r in self._refs.items() if p not in expect}
+        assert not leaked, f"leaked pages (refs with no holder): {leaked}"
+        for p, want in expect.items():
+            got = self._refs.get(p, 0)
+            assert got == want, (
+                f"page {p}: {got} refs but {want} holders")
 
 
 @dataclass
 class PagedKVPayload:
     """One prefilled request's KV, by reference into the source pool.
 
-    source    — the Engine whose pool holds the pages.
-    page_ids  — (n_pages,) physical ids in the source pool, in sequence
-                order (page j holds tokens [j*page, (j+1)*page)).
-    n_tokens  — true KV length (prompt + multimodal tokens).
-    side      — batch-1 slot state pytree: {"ssm", "cross", "len"}.
-    kv_nbytes — attention-KV bytes these pages occupy across all layers
-                (what a cross-engine insert actually moves).
+    source        — the Engine whose pool holds the pages.
+    page_ids      — (n_pages,) physical ids in the source pool, in sequence
+                    order (page j holds tokens [j*page, (j+1)*page)). Pages
+                    shared via the prefix cache appear here too; the payload
+                    owns one ref on every listed page.
+    n_tokens      — true KV length (prompt + multimodal tokens).
+    side          — batch-1 slot state pytree: {"ssm", "cross", "len"}.
+    kv_nbytes     — attention-KV bytes these pages occupy across all layers
+                    (what a cross-engine insert actually moves).
+    cached_tokens — prompt tokens served from the prefix cache (prefill
+                    computed only the remaining suffix).
     """
 
     source: Any
@@ -101,6 +167,7 @@ class PagedKVPayload:
     n_tokens: int
     side: Dict[str, Any] = field(default_factory=dict)
     kv_nbytes: int = 0
+    cached_tokens: int = 0
 
     @property
     def n_pages(self) -> int:

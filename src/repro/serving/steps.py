@@ -17,7 +17,8 @@ from repro.models.model import decode_forward, prefill_forward
 from repro.serving.sampling import sample
 
 
-def make_prefill_fn(cfg: ModelConfig, donate_caches: bool = False):
+def make_prefill_fn(cfg: ModelConfig, donate_caches: bool = False,
+                    prefix: bool = False):
     """Jitted prefill step.
 
     donate_caches=True is the PAGED variant: ``caches`` is a hybrid
@@ -25,7 +26,26 @@ def make_prefill_fn(cfg: ModelConfig, donate_caches: bool = False):
     page scatter is an in-place write, not a pool copy), a fresh
     batch-1 side state for "ssm"/"cross"/"len", and the request's
     staging block-table row under "pages".
+
+    prefix=True is the SUFFIX variant over that paged pytree: ``tokens``
+    holds only the uncached tail of the prompt (from the page-aligned
+    ``pos_base``; entries before ``prefix_len`` are dummies) and the
+    block-table row already maps the shared prefix pages, so prefill
+    computes O(suffix) instead of O(prompt). Traces once per padded
+    suffix-page bucket.
     """
+
+    if prefix:
+
+        @functools.partial(jax.jit, donate_argnums=(3,))
+        def prefill_suffix_fn(params, tokens, lengths, caches, prefix_len,
+                              pos_base):
+            logits, new_caches = prefill_forward(
+                params, cfg, tokens, caches, lengths=lengths,
+                prefix_len=prefix_len, pos_base=pos_base)
+            return logits, new_caches
+
+        return prefill_suffix_fn
 
     @functools.partial(jax.jit,
                        donate_argnums=(3,) if donate_caches else ())
@@ -93,6 +113,22 @@ def make_page_copy_fn():
             return dst.at[:, dst_ids].set(src[:, src_ids].astype(dst.dtype))
 
         return jax.tree.map(cp, dst_attn, src_attn)
+
+    return copy_fn
+
+
+def make_pool_page_copy_fn():
+    """Same-pool page duplication: the copy-on-write step of the prefix
+    cache. Copies each ``src_ids[i]`` page onto ``dst_ids[i]`` within one
+    engine's pool so a request diverging inside a shared, partially
+    matched page writes its own private copy instead of the shared page."""
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def copy_fn(attn, src_ids, dst_ids):
+        def cp(pool):
+            return pool.at[:, dst_ids].set(pool[:, src_ids])
+
+        return jax.tree.map(cp, attn)
 
     return copy_fn
 

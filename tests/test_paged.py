@@ -177,6 +177,7 @@ def test_paged_engine_matches_dense(smollm):
     # all pages reclaimed after the requests completed
     assert paged.pool.n_free == paged.pool.n_pages - 1
     assert paged.free_slots() == [0, 1]
+    paged.assert_no_page_leaks()
 
 
 def test_paged_engine_grows_pages_across_boundaries(smollm):
@@ -194,6 +195,7 @@ def test_paged_engine_grows_pages_across_boundaries(smollm):
         eng.decode_step()
     assert len(req.output_tokens) == 12
     assert eng.pool.n_free == eng.pool.n_pages - 1
+    eng.assert_no_page_leaks()
 
 
 def test_paged_insert_bytes_ratio_acceptance(smollm):
@@ -212,12 +214,16 @@ def test_paged_insert_bytes_ratio_acceptance(smollm):
     dense.insert(req, payload, first)
     req2 = Request(prompt_tokens=list(range(2, 10)), max_new_tokens=2)
     first2, payload2 = cluster_src.prefill_request(req2)
+    # prompt 8 @ page 16 is exactly one page (insert neutralizes the
+    # payload's page list, so snapshot before)
+    assert payload2.n_pages == 1
     paged.insert(req2, payload2, first2)      # cross-engine: O(pages) copy
     assert paged.kv_insert_bytes > 0
     ratio = dense.kv_insert_bytes / paged.kv_insert_bytes
     assert ratio >= 4.0, f"insert bytes ratio {ratio:.1f} < 4"
-    # prompt 8 @ page 16 is exactly one page
-    assert payload2.n_pages == 1
+    # cross-engine insert drained the source pool; dest holds slot pages
+    cluster_src.assert_no_page_leaks()
+    paged.assert_no_page_leaks()
 
 
 def test_paged_cluster_e2e_whisper():
@@ -253,6 +259,8 @@ def test_paged_cluster_e2e_whisper():
     # both pools drained back to empty
     assert cluster.prefill_engine.pool.n_used == 0
     assert cluster.decode_engine.pool.n_used == 0
+    cluster.prefill_engine.assert_no_page_leaks()
+    cluster.decode_engine.assert_no_page_leaks()
 
 
 def test_paged_cache_pytree_shapes(smollm):
@@ -293,6 +301,10 @@ def test_paged_insert_failure_keeps_payload_retryable(smollm):
     while eng.n_active:
         eng.decode_step()
     eng.insert(r2, p2, f2)                    # retry succeeds
+    # the payload's refs now belong to the slot: a stray release is a
+    # no-op instead of freeing pages out from under the live request
+    eng.release_payload(p2)
+    eng.assert_no_page_leaks()
     while eng.n_active:
         eng.decode_step()
     assert len(r2.output_tokens) >= 2
@@ -300,9 +312,11 @@ def test_paged_insert_failure_keeps_payload_retryable(smollm):
     r3 = Request(prompt_tokens=[8, 9], max_new_tokens=2)
     _, p3 = eng.prefill_request(r3)
     assert eng.pool.n_used == p3.n_pages
+    eng.assert_no_page_leaks(extra_holders=[p3.page_ids])
     eng.release_payload(p3)
     eng.release_payload(p3)
     assert eng.pool.n_used == 0
+    eng.assert_no_page_leaks()
 
 
 def test_paged_grow_pages_exhaustion_is_atomic(smollm):

@@ -1,0 +1,87 @@
+"""Hypothesis property tests for the radix-tree prefix cache:
+ref-count conservation, branch integrity, and match/page agreement under
+arbitrary interleavings of insert / release / evict."""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.serving.kv_pool import PagePool
+from repro.serving.prefix_cache import PrefixCache
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: ref-count + branch-integrity invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["insert", "release", "evict"]),
+                          st.integers(0, 7), st.integers(1, 20)),
+                min_size=1, max_size=40),
+       st.integers(2, 8))
+def test_tree_refcount_invariant(ops, page):
+    """Total refs per page == retaining requests + tree retentions, under
+    arbitrary interleavings of insert / release / evict; inserted
+    sequences stay matchable unless evicted; unrelated branches survive."""
+    pool = PagePool(257, page_size=page)
+    cache = PrefixCache(page, pool)
+    live = {}                                     # rid -> (tokens, ids)
+    rid = 0
+    for op, fam, ln in ops:
+        if op == "insert" and pool.n_free >= pool.pages_for(ln):
+            # family gives shared prefixes; ln the total length
+            tokens = [fam * 1000 + j // 3 for j in range(ln)]
+            ids = pool.alloc(pool.pages_for(ln))
+            cache.insert(tokens, ids)
+            live[rid] = (tokens, ids)
+            rid += 1
+        elif op == "release" and live:
+            k = sorted(live)[fam % len(live)]
+            _, ids = live.pop(k)
+            pool.free(ids)
+        elif op == "evict":
+            cache.evict(ln)
+        # invariant: allocator state == request holders + tree retentions
+        pool.assert_balanced(
+            [ids for _, ids in live.values()] + [cache.retained_pages()])
+    # match structure agrees with the refs it takes: one page per full
+    # matched page, a CoW source iff the match ends inside a page (same-
+    # family sequences share prefixes, so a match may run past one
+    # request's own full pages into a longer relative's retention)
+    for tokens, _ in live.values():
+        m = cache.match_and_ref(tokens)
+        assert m.n_tokens <= len(tokens)
+        assert m.n_full_pages == m.n_tokens // page
+        assert (m.cow_src is None) == (m.n_tokens % page == 0)
+        pool.unref(m.page_ids)
+        if m.cow_src is not None:
+            pool.unref([m.cow_src])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 3), min_size=1, max_size=24),
+                min_size=2, max_size=8))
+def test_tree_match_is_true_prefix(seqs):
+    """match_len never exceeds the true longest common prefix with some
+    inserted sequence (no cross-branch corruption)."""
+    page = 4
+    cache = PrefixCache(page)
+    inserted = []
+    for s in seqs:
+        cache.insert(s)
+        inserted.append(list(s))
+    for s in seqs:
+        probe = list(s) + [99]
+        n = cache.match_len(probe)
+        best = 0
+        for t in inserted:
+            full = (len(t) // page) * page
+            lcp = 0
+            while (lcp < min(len(probe), len(t)) and probe[lcp] == t[lcp]):
+                lcp += 1
+            best = max(best, min(lcp, full))
+        assert n == best
+
+
