@@ -33,6 +33,10 @@ def main() -> None:
         from benchmarks.prefix_bench import bench_prefix_cache
         for row in bench_prefix_cache():
             print(row)
+    if only is None or "chunked" in only:
+        from benchmarks.chunked_prefill_bench import bench_chunked_prefill
+        for row in bench_chunked_prefill():
+            print(row)
     print(f"# total {time.time() - t_start:.1f}s")
 
 

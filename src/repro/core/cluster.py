@@ -31,7 +31,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.costmodel import CostModel, Hardware, V5E
-from repro.core.kv_transfer import TransferPlan, plan as kv_plan
+from repro.core.kv_transfer import (TransferPlan, plan as kv_plan,
+                                    plan_chunked as kv_plan_chunked)
 from repro.core.mm_store import MMStore
 from repro.models import frontend as FE
 from repro.serving.engine import Engine
@@ -62,22 +63,28 @@ class EPDCluster:
                  max_len: int = 128, kv_scheme: str = "grouped",
                  hw: Hardware = V5E, paged: bool = False,
                  page_size: int = 16, prefix_cache: bool = False,
-                 n_prefill_pool_pages: Optional[int] = None):
+                 n_prefill_pool_pages: Optional[int] = None,
+                 chunked_prefill: bool = False, prefill_chunk: int = 32):
         self.cfg = cfg
         self.store = MMStore()
         self.cost = CostModel(cfg, hw,
                               page_tokens=page_size if paged else 0)
         self.kv_scheme = kv_scheme
         self.paged = paged
+        self.chunked_prefill = chunked_prefill
         # Prefill engine: batch 1 (prefill is per-request); carries the
         # radix prefix cache when enabled (hits skip prefill compute for
-        # the shared pages and the transfer planner charges suffix-only).
+        # the shared pages and the transfer planner charges suffix-only)
+        # and the chunked-prefill window (each chunk's pages stream to
+        # Decode while the next chunk computes).
         # Decode engine: the continuous-batching instance.
         self.prefill_engine = Engine(cfg, params, max_batch=1,
                                      max_len=max_len, paged=paged,
                                      page_size=page_size,
                                      prefix_cache=prefix_cache,
-                                     n_pool_pages=n_prefill_pool_pages)
+                                     n_pool_pages=n_prefill_pool_pages,
+                                     chunked_prefill=chunked_prefill,
+                                     prefill_chunk=prefill_chunk)
         self.decode_engine = Engine(cfg, params, max_batch=max_batch,
                                     max_len=max_len, paged=paged,
                                     page_size=page_size)
@@ -130,14 +137,29 @@ class EPDCluster:
         # prefix-cache hits shrink the prefill the transfer overlaps with:
         # only the computed suffix counts as per-layer compute.
         cached = getattr(caches, "cached_tokens", 0)
-        p = kv_plan(self.kv_scheme,
-                    n_layers=self.cfg.n_layers,
-                    bytes_per_layer=nbytes / self.cfg.n_layers,
-                    per_layer_compute=self.cost.per_layer_prefill_time(
-                        req.total_prompt_len, cached_prefix=cached),
-                    handshake=self.cost.hw.handshake,
-                    link_bw=self.cost.hw.link_bw,
-                    page_bytes=self.cost.kv_page_bytes_per_layer())
+        chunks = getattr(caches, "chunks", None)
+        if chunks:
+            # streaming chunked prefill: segment k's pages (measured from
+            # the actual payload) ship while segment k+1 computes; a
+            # cached-prefix segment (0 computed tokens) is ready at t=0
+            per_page = nbytes / max(len(caches.page_ids), 1)
+            p = kv_plan_chunked(
+                chunk_bytes=[n_pg * per_page for _, n_pg in chunks],
+                chunk_compute=self.cost.chunk_prefill_times(
+                    req.total_prompt_len, [toks for toks, _ in chunks],
+                    cached_prefix=cached),
+                handshake=self.cost.hw.handshake,
+                link_bw=self.cost.hw.link_bw,
+                page_bytes=self.cost.kv_page_bytes())
+        else:
+            p = kv_plan(self.kv_scheme,
+                        n_layers=self.cfg.n_layers,
+                        bytes_per_layer=nbytes / self.cfg.n_layers,
+                        per_layer_compute=self.cost.per_layer_prefill_time(
+                            req.total_prompt_len, cached_prefix=cached),
+                        handshake=self.cost.hw.handshake,
+                        link_bw=self.cost.hw.link_bw,
+                        page_bytes=self.cost.kv_page_bytes_per_layer())
         self.report.kv_plans.append(p)
         self.decode_engine.insert(req, caches, first)
 

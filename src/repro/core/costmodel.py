@@ -103,6 +103,50 @@ class CostModel:
         t = max(t_c, t_m)
         return t + self.hw.launch_overhead + self._tp_penalty(tp, cfg.n_layers)
 
+    def chunk_prefill_times(self, prompt_len: int,
+                            chunk_tokens: "list[float]", chips: int = 1,
+                            tp: int = 1,
+                            cached_prefix: float = 0.0) -> "list[float]":
+        """Per-chunk slices of one request's prefill for the chunked
+        streaming schedule (kv_transfer.plan_chunked).
+
+        ``chunk_tokens[k]`` is the number of tokens chunk *k* computes
+        (a leading 0 entry models a cached-prefix segment: no compute,
+        its KV is already resident). The monolithic
+        ``prefill_time(prompt_len, cached_prefix=...)`` is split across
+        chunks proportional to each chunk's FLOPs — linear terms on its
+        computed tokens, the quadratic attention term against its
+        end-of-chunk context — so chunking never changes total modeled
+        compute; each chunk past the first adds one ``launch_overhead``
+        (the extra kernel dispatch), which is the honest cost of
+        chunking that the transfer overlap has to beat.
+        """
+        cfg = self.cfg
+        total = self.prefill_time(prompt_len, chips, tp,
+                                  cached_prefix=cached_prefix)
+        n_active = cfg.active_param_count()
+        attn_layers = len(cfg.attn_layers)
+        ctx = max(0.0, cached_prefix)
+        weights = []
+        for c in chunk_tokens:
+            ctx += c
+            w = 2.0 * n_active * c
+            if attn_layers and c:
+                eff_ctx = ctx if cfg.sliding_window is None else min(
+                    ctx, cfg.sliding_window)
+                w += 4.0 * attn_layers * c * eff_ctx * cfg.q_dim
+            weights.append(w)
+        wsum = sum(weights) or 1.0
+        out = [total * w / wsum for w in weights]
+        extra = 0
+        for k, c in enumerate(chunk_tokens):
+            if c <= 0:
+                continue
+            if extra:
+                out[k] += self.hw.launch_overhead
+            extra += 1
+        return out
+
     def decode_step_time(self, batch: int, kv_len: float, chips: int = 1,
                          tp: int = 1) -> float:
         """One decode iteration for a batch (memory-bound)."""

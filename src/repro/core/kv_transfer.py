@@ -19,6 +19,14 @@ Three schemes, matching the paper's ablation:
 The planner is deterministic and separately unit-tested; both the
 simulator and the real mini-cluster runner call :func:`plan`.
 
+:func:`plan_chunked` is the CHUNKED-prefill variant (streaming P->D):
+prefill runs in fixed-size token chunks and chunk *k*'s pages (all
+layers, one grouped handshake) ride the link while chunk *k+1* computes.
+A cached-prefix segment (zero compute) can ship immediately at t=0. The
+only exposed latency is the final chunk's tail — for long prompts this
+replaces the serialized prefill-then-transfer TTFT with
+max(prefill, transfer) + last-chunk tail.
+
 Metric definitions (paper Table 4):
   kv_latency  — total time the transfer machinery is busy (handshakes +
                 wire) for this request's KV.
@@ -33,12 +41,13 @@ import math
 from dataclasses import dataclass
 from typing import List, Literal
 
-Scheme = Literal["one_shot", "layer_wise", "grouped"]
+Scheme = Literal["one_shot", "layer_wise", "grouped", "chunked"]
 
 
 @dataclass(frozen=True)
 class GroupPlan:
-    """One transmission unit: layers [start, end)."""
+    """One transmission unit: layers [start, end) (prefill chunks
+    [start, end) for the "chunked" scheme)."""
     start: int
     end: int
     nbytes: float
@@ -179,4 +188,52 @@ def plan(scheme: Scheme, *, n_layers: int, bytes_per_layer: float,
     exposed = max(0.0, total_done - prefill_time)
     eff_bw = payload / busy
     return TransferPlan("grouped", groups, prefill_time, prefill_time,
+                        busy, exposed, eff_bw)
+
+
+def plan_chunked(*, chunk_bytes: List[float], chunk_compute: List[float],
+                 handshake: float, link_bw: float,
+                 page_bytes: float = 0.0) -> TransferPlan:
+    """Streaming transfer schedule for a CHUNKED prefill.
+
+    ``chunk_bytes[k]`` — KV bytes of segment *k* across ALL layers;
+    ``chunk_compute[k]`` — that segment's prefill compute time (0 for a
+    segment already resident, e.g. a prefix-cache hit, whose pages can
+    ship before any compute). Segment *k*'s transfer is one grouped unit
+    (single async handshake) eligible to start the moment its compute
+    finishes, so it rides the link while segments k+1.. compute. Empty
+    (zero-byte) segments emit no group and pay no handshake, but their
+    compute still advances the clock.
+
+    ``page_bytes`` > 0 rounds every segment up to whole KV-pool pages
+    (here the quantum is a FULL page across all layers — chunk payloads
+    map 1:1 onto pool pages, unlike the per-layer slices of
+    :func:`plan`).
+    """
+    if len(chunk_bytes) != len(chunk_compute):
+        raise ValueError(
+            f"{len(chunk_bytes)} byte segments vs "
+            f"{len(chunk_compute)} compute segments")
+    groups: List[GroupPlan] = []
+    clock = 0.0                        # compute-stream time
+    link_free = 0.0
+    busy = 0.0
+    payload = 0.0
+    for k, (nbytes, t_c) in enumerate(zip(chunk_bytes, chunk_compute)):
+        clock += t_c
+        if page_bytes > 0 and nbytes > 0:
+            nbytes = math.ceil(nbytes / page_bytes) * page_bytes
+        if nbytes <= 0:
+            continue
+        t_send = max(clock, link_free) + handshake
+        t_done = t_send + nbytes / link_bw
+        groups.append(GroupPlan(k, k + 1, nbytes, clock, t_send, t_done))
+        link_free = t_done
+        busy += handshake + nbytes / link_bw
+        payload += nbytes
+    prefill_end = sum(chunk_compute)
+    total_done = max((g.t_done for g in groups), default=prefill_end)
+    exposed = max(0.0, total_done - prefill_end)
+    eff_bw = payload / busy if busy > 0 else 0.0
+    return TransferPlan("chunked", groups, prefill_end, prefill_end,
                         busy, exposed, eff_bw)

@@ -112,6 +112,14 @@ class Router:
         st.queue_len = max(0, st.queue_len - 1)
         st.pending_tokens = max(0.0, st.pending_tokens - tokens)
 
+    def on_prefill_progress(self, name: str, tokens: float) -> None:
+        """Chunk-granular prefill occupancy: a chunked prefill retires
+        its pending tokens one chunk at a time (instead of all at
+        start), so the load metric tracks the work actually remaining
+        on the instance mid-prefill."""
+        st = self.status[name]
+        st.pending_tokens = max(0.0, st.pending_tokens - tokens)
+
     def on_busy_until(self, name: str, t: float) -> None:
         st = self.status[name]
         st.busy_until = max(st.busy_until, t)

@@ -36,7 +36,8 @@ from repro.core.costmodel import CostModel, Hardware, V5E
 from repro.core.deployment import Deployment, parse
 from repro.core.ep_prefetch import EPPrefetcher
 from repro.core.events import EventLoop
-from repro.core.kv_transfer import plan as kv_plan
+from repro.core.kv_transfer import (plan as kv_plan,
+                                    plan_chunked as kv_plan_chunked)
 from repro.core.mm_store import MMStore
 from repro.core.scheduler import Router
 from repro.models.frontend import encode_tokens_for_image
@@ -124,6 +125,13 @@ class SimConfig:
     # bounded KV pool and keeps long simulations from growing one radix
     # node per unique prompt tail forever
     prefix_cache_tokens: int = 65536
+    # chunked prefill + streaming P->D transfer: prefill runs in
+    # fixed-size chunks whose KV ships while the next chunk computes
+    # (kv_transfer.plan_chunked); prefill occupancy retires pending
+    # tokens chunk by chunk (Router.on_prefill_progress). Each extra
+    # chunk costs one launch overhead — the price of streaming.
+    chunked_prefill: bool = False
+    prefill_chunk_tokens: int = 256
 
 
 @dataclass
@@ -207,9 +215,9 @@ class _Instance:
         loop = sim.loop
         if self.queue:
             stage, req = self.queue.pop(0)
-            sim.router.on_start(self.spec.name, req.total_prompt_len)
             self.busy, self.running_stage = True, stage
             if stage == "E":
+                sim.router.on_start(self.spec.name, req.total_prompt_len)
                 dur = sim.cost.encode_time(req.mm_tokens, self.spec.chips,
                                            self.spec.tp)
                 dur *= self._interference("E")
@@ -217,12 +225,33 @@ class _Instance:
                 loop.after(dur, lambda: self._finish_encode(req))
             else:
                 cached = self._prefix_lookup(req)
-                dur = sim.cost.prefill_time(req.total_prompt_len,
-                                            self.spec.chips, self.spec.tp,
-                                            cached_prefix=cached)
-                dur *= self._interference("P")
+                chunk_toks = self._chunk_tokens(req, cached)
+                inter = self._interference("P")
                 req.t_prefill_start = loop.now
-                self._start_prefill(req, dur)
+                if chunk_toks is None:
+                    sim.router.on_start(self.spec.name,
+                                        req.total_prompt_len)
+                    dur = sim.cost.prefill_time(
+                        req.total_prompt_len, self.spec.chips,
+                        self.spec.tp, cached_prefix=cached) * inter
+                    self._start_prefill(req, dur, cached, None)
+                else:
+                    # chunk-granular occupancy: the cached prefix
+                    # retires immediately, computed tokens retire as
+                    # each chunk finishes
+                    sim.router.on_start(self.spec.name, cached)
+                    times = [t * inter for t in sim.cost.chunk_prefill_times(
+                        req.total_prompt_len, chunk_toks, self.spec.chips,
+                        self.spec.tp, cached_prefix=cached)]
+                    t_end = 0.0
+                    name = self.spec.name
+                    for c, dt in zip(chunk_toks, times):
+                        t_end += dt
+                        loop.after(t_end, lambda c=c:
+                                   sim.router.on_prefill_progress(name, c))
+                    dur = sum(times)
+                    self._start_prefill(req, dur, cached,
+                                        (chunk_toks, times))
             sim.router.on_busy_until(self.spec.name, loop.now + dur)
         elif self.decode_batch:
             self.busy, self.running_stage = True, "D"
@@ -236,6 +265,29 @@ class _Instance:
             sim.router.on_busy_until(self.spec.name, loop.now + dur)
         else:
             self.busy, self.running_stage = False, None
+
+    def _chunk_tokens(self, req: Request, cached: float) -> Optional[list]:
+        """Computed-token split of this request's prefill into fixed
+        chunks, or None when chunked mode is off / the prompt fits in
+        one chunk (chunking a single-chunk prompt only adds overhead).
+        Mirrors the real engine's fallbacks: multimodal prompts and
+        non-attention-only decoders are served monolithically, so the
+        sim must not credit them streaming overlap."""
+        cfg = self.sim.cfg
+        model = self.sim.model
+        if not cfg.chunked_prefill:
+            return None
+        if req.is_multimodal or model.encoder is not None \
+                or model.ssm_layers:
+            return None
+        C = max(1, cfg.prefill_chunk_tokens)
+        computed = max(1, int(req.total_prompt_len - cached))
+        if computed <= C:
+            return None
+        out = [C] * (computed // C)
+        if computed % C:
+            out.append(computed % C)
+        return out
 
     def _prefix_lookup(self, req: Request) -> float:
         """Cached-prefix tokens on THIS instance's radix tree (full pages
@@ -263,7 +315,8 @@ class _Instance:
         else:
             self._next()
 
-    def _start_prefill(self, req: Request, base_dur: float) -> None:
+    def _start_prefill(self, req: Request, base_dur: float, cached: float,
+                       chunked: Optional[tuple]) -> None:
         sim = self.sim
         d_inst = sim.pick_decode_instance(req, prefer=self.spec.name)
         if d_inst is self:
@@ -271,14 +324,32 @@ class _Instance:
             sim.loop.after(base_dur, lambda: self._finish_prefill(
                 req, d_inst, join_delay=0.0))
             return
-        p = kv_plan(sim.cfg.kv_scheme,
-                    n_layers=sim.model.n_layers,
-                    bytes_per_layer=sim.cost.kv_bytes(req.total_prompt_len)
-                    / sim.model.n_layers,
-                    per_layer_compute=base_dur / sim.model.n_layers,
-                    handshake=sim.cfg.hw.handshake,
-                    link_bw=sim.cfg.hw.link_bw,
-                    page_bytes=sim.cost.kv_page_bytes_per_layer())
+        if chunked is not None:
+            # streaming: chunk k's pages ride the link under chunk k+1's
+            # compute; a cached prefix ships at t=0 (zero compute).
+            # Segment bytes are token-proportional slices of the SAME
+            # kv_bytes total the serialized baseline plans (sliding-
+            # window cap + SSM state included), so the A/B compares
+            # schedules, not payload models.
+            chunk_toks, times = chunked
+            total_toks = cached + sum(chunk_toks)
+            per_tok = sim.cost.kv_bytes(req.total_prompt_len) / total_toks
+            p = kv_plan_chunked(
+                chunk_bytes=[cached * per_tok]
+                + [c * per_tok for c in chunk_toks],
+                chunk_compute=[0.0] + list(times),
+                handshake=sim.cfg.hw.handshake,
+                link_bw=sim.cfg.hw.link_bw,
+                page_bytes=sim.cost.kv_page_bytes())
+        else:
+            p = kv_plan(sim.cfg.kv_scheme,
+                        n_layers=sim.model.n_layers,
+                        bytes_per_layer=sim.cost.kv_bytes(
+                            req.total_prompt_len) / sim.model.n_layers,
+                        per_layer_compute=base_dur / sim.model.n_layers,
+                        handshake=sim.cfg.hw.handshake,
+                        link_bw=sim.cfg.hw.link_bw,
+                        page_bytes=sim.cost.kv_page_bytes_per_layer())
         sim.kv_plans.append(p)
         # layer-wise blocking handshakes stretch prefill itself
         sim.loop.after(p.prefill_end, lambda: self._finish_prefill(
@@ -287,13 +358,24 @@ class _Instance:
     def _finish_prefill(self, req: Request, d_inst: "_Instance",
                         join_delay: float) -> None:
         sim = self.sim
-        req.t_first_token = sim.loop.now
-        req.output_tokens.append(0)          # O1 produced by Prefill
-        if req.max_new_tokens <= 1:
-            req.t_done = sim.loop.now
-            sim.done.append(req)
+
+        def emit() -> None:
+            # first token gated on the Decode side holding the full KV
+            # (kv_transfer's "TTFT gate"): the exposed transfer tail sits
+            # on the TTFT critical path, which is what the grouped /
+            # chunked streaming schemes shrink
+            req.t_first_token = sim.loop.now
+            req.output_tokens.append(0)
+            if req.max_new_tokens <= 1:
+                req.t_done = sim.loop.now
+                sim.done.append(req)
+            else:
+                d_inst.join_decode(req)
+
+        if join_delay > 0:
+            sim.loop.after(join_delay, emit)
         else:
-            sim.loop.after(join_delay, lambda: d_inst.join_decode(req))
+            emit()
         self._next()
 
     def _finish_decode_iter(self) -> None:
@@ -433,7 +515,9 @@ def simulate(model: ModelConfig, deployment: str, dataset: DatasetSpec,
              per_chip_rate: bool = False,
              kv_page_tokens: int = 0,
              prefix_cache: bool = False,
-             cache_aware_routing: bool = True) -> SimMetrics:
+             cache_aware_routing: bool = True,
+             chunked_prefill: bool = False,
+             prefill_chunk_tokens: int = 256) -> SimMetrics:
     """Run one deployment against a trace injected at ``rate`` req/s.
 
     per_chip_rate=True multiplies the rate by the deployment's chip count
@@ -446,7 +530,9 @@ def simulate(model: ModelConfig, deployment: str, dataset: DatasetSpec,
                     ep_async=ep_async, replicas=replicas, hw=hw,
                     kv_page_tokens=kv_page_tokens,
                     prefix_cache=prefix_cache,
-                    cache_aware_routing=cache_aware_routing)
+                    cache_aware_routing=cache_aware_routing,
+                    chunked_prefill=chunked_prefill,
+                    prefill_chunk_tokens=prefill_chunk_tokens)
     sim = Simulator(model, cfg)
     if per_chip_rate:
         rate = rate * sim.deployment.n_chips

@@ -26,6 +26,19 @@ Two KV layouts:
   tree and evicted LRU under pool pressure. Requires an attention-only
   decoder (no SSM state / cross-attention to reconstruct mid-sequence)
   and applies to text-only requests.
+* paged + ``chunked_prefill=True`` — long prompts prefill in fixed-size
+  chunks of ``prefill_chunk`` tokens (a page multiple): each chunk
+  allocates only its own pages, scatters them into the pool as it
+  finishes, and attends over chunks 0..k-1 through the block table (the
+  same gather-prefix path the prefix cache uses, with the chunk start as
+  ``pos_base`` and the tokens already resident as ``prefix_len``). The
+  in-flight prefill window is O(chunk) instead of O(prompt), and the
+  P->D payload records per-chunk segments so the transfer planner can
+  stream chunk *k*'s pages while chunk *k+1* computes
+  (kv_transfer.plan_chunked). Composes with the prefix cache — a cached
+  prefix skips whole leading chunks. Same attention-only/text-only
+  constraints as the prefix cache; multimodal requests fall back to the
+  monolithic paged path.
 
 The EPD disaggregation layer (repro.core) drives one or more Engines: the
 Encode stage produces features into the MM Store, Prefill engines run
@@ -44,7 +57,7 @@ from repro.configs.base import ModelConfig
 from repro.models import frontend as FE
 from repro.models.transformer import make_caches
 from repro.serving.kv_pool import PagePool, PagedKVPayload
-from repro.serving.prefix_cache import PrefixCache
+from repro.serving.prefix_cache import MatchResult, PrefixCache
 from repro.serving.request import Request
 from repro.serving.steps import (make_decode_fn, make_insert_fn,
                                  make_page_copy_fn, make_paged_insert_fn,
@@ -57,7 +70,8 @@ class Engine:
                  cache_dtype=jnp.float32, kv_dtype=None,
                  paged: bool = False, page_size: int = 16,
                  n_pool_pages: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 chunked_prefill: bool = False, prefill_chunk: int = 32):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -66,6 +80,15 @@ class Engine:
         self.kv_dtype = kv_dtype          # e.g. jnp.float8_e4m3fn (§Perf)
         self.paged = paged
         self.page_size = page_size
+        self.chunked_prefill = chunked_prefill
+        self.prefill_chunk = prefill_chunk
+        if chunked_prefill:
+            if not paged:
+                raise ValueError("chunked_prefill requires paged=True")
+            if prefill_chunk <= 0 or prefill_chunk % page_size:
+                raise ValueError(
+                    f"prefill_chunk {prefill_chunk} must be a positive "
+                    f"multiple of page {page_size}")
         self._decode = make_decode_fn(cfg, temperature)
         if paged:
             if max_len % page_size:
@@ -92,15 +115,17 @@ class Engine:
             self.caches = make_caches(cfg, max_batch, max_len,
                                       dtype=cache_dtype, kv_dtype=kv_dtype)
         self.prefix_cache: Optional[PrefixCache] = None
-        if prefix_cache:
+        if prefix_cache or chunked_prefill:
             if cfg.encoder is not None or cfg.ssm_layers:
                 raise ValueError(
-                    "prefix_cache needs an attention-only decoder: SSM "
-                    "state / cross-KV cannot be resumed mid-sequence")
-            self.prefix_cache = PrefixCache(page_size, self.pool)
+                    "prefix_cache/chunked_prefill need an attention-only "
+                    "decoder: SSM state / cross-KV cannot be resumed "
+                    "mid-sequence")
             self._prefill_suffix = make_prefill_fn(cfg, donate_caches=True,
                                                    prefix=True)
             self._cow_copy = make_pool_page_copy_fn()
+        if prefix_cache:
+            self.prefix_cache = PrefixCache(page_size, self.pool)
         self.slots: List[Optional[Request]] = [None] * max_batch
         self._last_tok = np.zeros((max_batch,), np.int32)
         self._key = jax.random.PRNGKey(0)
@@ -196,9 +221,9 @@ class Engine:
             self.prefill_tokens_computed += n_tokens
             return first, caches
 
-        if (self.prefix_cache is not None and n_mm == 0
-                and mm_embeds is None and enc_frames is None):
-            return self._prefill_with_prefix(req, n_tokens, lengths)
+        if ((self.chunked_prefill or self.prefix_cache is not None)
+                and n_mm == 0 and mm_embeds is None and enc_frames is None):
+            return self._prefill_chunked(req, n_tokens)
 
         # ---- paged: write KV straight into this engine's pool pages ----
         toks = np.pad(toks, ((0, 0), (0, pad)))
@@ -222,57 +247,95 @@ class Engine:
             kv_nbytes=len(ids) * self._attn_kv_nbytes(self.caches["attn"]))
         return first, payload
 
-    def _prefill_with_prefix(self, req: Request, n_tokens: int, lengths):
-        """Prefix-cache hit path: ref shared pages, CoW a partially
-        matched page, prefill only the suffix from the page-aligned match
-        offset, then retain the new full pages in the radix tree."""
+    def _prefill_chunked(self, req: Request, n_tokens: int):
+        """Chunked prefill (text-only, batch 1): compute the prompt in
+        fixed windows of ``prefill_chunk`` tokens. Chunk *k* allocates
+        only its own pages, scatters its KV into the pool, and attends
+        over chunks 0..k-1 via the block-table gather (``prefix_len`` =
+        tokens already resident, ``pos_base`` = the chunk's page-aligned
+        start) — so the in-flight window is O(chunk), not O(prompt).
+
+        With the prefix cache enabled, the longest cached prefix is
+        ref'd first and whole leading chunks are skipped; a match ending
+        inside a page is copied on write so shared pages are never
+        mutated. The payload records per-chunk (tokens, pages) segments
+        so the P->D planner can stream chunk *k* while chunk *k+1*
+        computes.
+
+        This is ALSO the prefix-cache hit path of a non-chunked engine:
+        with the window widened to the whole prompt, the loop runs once
+        and degenerates to the monolithic suffix prefill (same trace
+        bucket, same CoW/unwind protocol — one implementation to audit).
+        Such payloads carry no segments, so the cluster plans their
+        transfer monolithically."""
         page = self.page_size
-        # cap at n-1 so at least one token is computed (we need logits)
-        m = self.prefix_cache.match_and_ref(req.prompt_tokens,
-                                            cap=n_tokens - 1)
+        C = self.prefill_chunk if self.chunked_prefill else self.max_len
+        width = self.max_len // page
+        if self.prefix_cache is not None:
+            # cap at n-1 so at least one token is computed (need logits)
+            m = self.prefix_cache.match_and_ref(req.prompt_tokens,
+                                                cap=n_tokens - 1)
+        else:
+            m = MatchResult()
         n_shared = m.n_full_pages
-        pos_base = n_shared * page
-        left_pad = m.n_tokens - pos_base          # matched tokens in CoW page
-        suffix = req.prompt_tokens[m.n_tokens:]
-        S = -(-(left_pad + len(suffix)) // page) * page
-        new_ids = None
         cow_held = m.cow_src is not None
+        row = np.zeros((1, width), np.int32)
+        row[0, :n_shared] = m.page_ids
+        chunks: List[Tuple[int, int]] = []      # (computed tokens, pages)
+        if n_shared:
+            chunks.append((0, n_shared))        # ready before any compute
+        held: List[np.ndarray] = []             # fresh pages, for unwind
+        logits = None
         try:
-            new_ids = self._alloc_pages(S // page)
-            if m.cow_src is not None:
-                # never write a shared page: private copy, then overwrite
-                # its unmatched tail during the suffix scatter
-                self.caches["attn"] = self._cow_copy(
-                    self.caches["attn"], jnp.asarray([m.cow_src], jnp.int32),
-                    jnp.asarray([int(new_ids[0])], jnp.int32))
-                self.pool.unref([m.cow_src])
-                cow_held = False
-            row = np.zeros((1, self.max_len // page), np.int32)
-            row[0, :n_shared] = m.page_ids
-            row[0, n_shared:n_shared + len(new_ids)] = new_ids
-            sfx = np.zeros((1, S), np.int32)
-            sfx[0, left_pad:left_pad + len(suffix)] = suffix
-            side = self._side_caches()
-            pcaches = {"attn": self.caches["attn"], "ssm": side["ssm"],
-                       "cross": side["cross"], "len": side["len"],
-                       "pages": jnp.asarray(row)}
-            logits, new = self._prefill_suffix(
-                self.params, jnp.asarray(sfx), lengths, pcaches,
-                jnp.asarray(m.n_tokens, jnp.int32),
-                jnp.asarray(pos_base, jnp.int32))
+            done = m.n_tokens                   # tokens already in the pool
+            pos = n_shared * page               # page-aligned window start
+            while pos < n_tokens:
+                end = min(pos + C, n_tokens)
+                win = -(-end // page) * page - pos      # page-aligned window
+                ids = self._alloc_pages(-(-end // page) - pos // page)
+                held.append(ids)
+                if cow_held:
+                    # never write a shared page: private copy, then
+                    # overwrite its unmatched tail during the scatter
+                    self.caches["attn"] = self._cow_copy(
+                        self.caches["attn"],
+                        jnp.asarray([m.cow_src], jnp.int32),
+                        jnp.asarray([int(ids[0])], jnp.int32))
+                    self.pool.unref([m.cow_src])
+                    cow_held = False
+                row[0, pos // page:pos // page + len(ids)] = ids
+                sfx = np.zeros((1, win), np.int32)
+                sfx[0, done - pos:end - pos] = req.prompt_tokens[done:end]
+                side = self._side_caches()
+                pcaches = {"attn": self.caches["attn"], "ssm": side["ssm"],
+                           "cross": side["cross"], "len": side["len"],
+                           "pages": jnp.asarray(row)}
+                # lengths = this chunk's end: positions past it are
+                # dummies (masked scatter + position -1), so the window
+                # never claims tokens a later chunk will compute
+                logits, new = self._prefill_suffix(
+                    self.params, jnp.asarray(sfx),
+                    jnp.asarray([end], jnp.int32), pcaches,
+                    jnp.asarray(done, jnp.int32),
+                    jnp.asarray(pos, jnp.int32))
+                self.caches["attn"] = new["attn"]
+                chunks.append((end - done, len(ids)))
+                done = end
+                pos += win
         except BaseException:
             # un-wind every ref this request took (match, CoW source,
-            # fresh pages) so a failed prefill leaks nothing
+            # every chunk's fresh pages) so a failed prefill leaks nothing
             self.pool.unref(m.page_ids)
             if cow_held:
                 self.pool.unref([m.cow_src])
-            if new_ids is not None:
-                self.pool.unref(new_ids)
+            for ids in held:
+                self.pool.unref(ids)
             raise
-        self.caches["attn"] = new["attn"]
         first = int(jnp.argmax(logits[0]))
-        ids = np.asarray(row[0, :n_shared + len(new_ids)], np.int32)
-        self.prefix_cache.insert(req.prompt_tokens, ids)
+        n_pages = n_shared + sum(len(ids) for ids in held)
+        ids = np.asarray(row[0, :n_pages], np.int32)
+        if self.prefix_cache is not None:
+            self.prefix_cache.insert(req.prompt_tokens, ids)
         self.prefill_tokens_total += n_tokens
         self.prefill_tokens_computed += n_tokens - m.n_tokens
         payload = PagedKVPayload(
@@ -280,7 +343,8 @@ class Engine:
             side={"ssm": new["ssm"], "cross": new["cross"],
                   "len": new["len"]},
             kv_nbytes=len(ids) * self._attn_kv_nbytes(self.caches["attn"]),
-            cached_tokens=m.n_tokens)
+            cached_tokens=m.n_tokens,
+            chunks=chunks if self.chunked_prefill else [])
         return first, payload
 
     def insert(self, req: Request, prefilled, first_token: int) -> int:

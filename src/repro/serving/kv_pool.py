@@ -62,6 +62,9 @@ class PagePool:
         # contents are most likely still resident in cache hierarchies).
         self._free: List[int] = list(range(n_pages - 1, 0, -1))
         self._refs: Dict[int, int] = {}
+        # high-water mark of used pages (benchmarks: chunked-prefill
+        # memory accounting)
+        self.peak_used = 0
 
     @property
     def n_free(self) -> int:
@@ -90,6 +93,7 @@ class PagePool:
         del self._free[-n:]
         for p in out:
             self._refs[p] = 1
+        self.peak_used = max(self.peak_used, self.n_used)
         return np.asarray(out, np.int32)
 
     def ref(self, pages: Sequence[int]) -> None:
@@ -160,6 +164,13 @@ class PagedKVPayload:
                     (what a cross-engine insert actually moves).
     cached_tokens — prompt tokens served from the prefix cache (prefill
                     computed only the remaining suffix).
+    chunks        — streaming segments of a CHUNKED prefill, in order:
+                    (computed_tokens, n_pages) per segment. A leading
+                    (0, n) entry is the cached-prefix segment (ready
+                    before any compute). Empty for monolithic prefill.
+                    Sum of n_pages == len(page_ids); the transfer
+                    planner uses it to ship segment k while segment k+1
+                    computes (kv_transfer.plan_chunked).
     """
 
     source: Any
@@ -168,6 +179,7 @@ class PagedKVPayload:
     side: Dict[str, Any] = field(default_factory=dict)
     kv_nbytes: int = 0
     cached_tokens: int = 0
+    chunks: List[tuple] = field(default_factory=list)
 
     @property
     def n_pages(self) -> int:

@@ -33,6 +33,15 @@ def make_prefill_fn(cfg: ModelConfig, donate_caches: bool = False,
     block-table row already maps the shared prefix pages, so prefill
     computes O(suffix) instead of O(prompt). Traces once per padded
     suffix-page bucket.
+
+    The same suffix step is the CHUNK step of chunked prefill
+    (Engine._prefill_chunked): chunk *k* calls it with ``pos_base`` = the
+    chunk's page-aligned start, ``prefix_len`` = tokens already resident
+    in pool pages (chunks 0..k-1 plus any cached prefix), and
+    ``lengths`` = the chunk's END — so window positions past the chunk
+    are dummies (masked scatter, position -1) that a later chunk will
+    compute. Intermediate chunks share one fixed-size trace bucket; only
+    the final ragged window adds one.
     """
 
     if prefix:

@@ -1,0 +1,360 @@
+"""Chunked paged prefill: chunked-vs-monolithic greedy-token parity,
+streaming-transfer planning (kv_transfer.plan_chunked), cluster overlap
+accounting, and the simulator TTFT A/B against the serialized baseline."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.costmodel import RDMA, CostModel
+from repro.core.kv_transfer import plan, plan_chunked
+from repro.serving.request import Request
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    from repro.models.model import init_params
+    cfg = get_config("smollm-135m").reduced()
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _engine(cfg, params, *, chunk=None, prefix=False, max_len=64, page=8,
+            **kw):
+    from repro.serving.engine import Engine
+    return Engine(cfg, params, max_batch=2, max_len=max_len, paged=True,
+                  page_size=page, prefix_cache=prefix,
+                  chunked_prefill=chunk is not None,
+                  prefill_chunk=chunk or 32, **kw)
+
+
+def _serve(eng, prompt, n=5):
+    r = Request(prompt_tokens=list(prompt), max_new_tokens=n)
+    f, p = eng.prefill_request(r)
+    eng.insert(r, p, f)
+    while any(s is r for s in eng.slots):
+        eng.decode_step()
+    return r.output_tokens
+
+
+# ---------------------------------------------------------------------------
+# parity: chunked == monolithic greedy tokens, all chunk/prompt shapes
+# ---------------------------------------------------------------------------
+
+# page = 8, max_len = 64. Prompts cover: inside one page, non-divisible
+# by both page and chunk, exactly chunk-divisible, one past a boundary.
+PROMPTS = ([5, 6, 7], list(range(2, 22)), list(range(2, 34)),
+           list(range(2, 35)))
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 32])
+def test_chunked_matches_monolithic_tokens(smollm, chunk):
+    """Greedy outputs are byte-identical whether the prompt prefills in
+    one shot or in chunks of ``chunk`` tokens: chunk == page, chunk >
+    page, non-divisible prompt, prompt < chunk, boundary-exact prompt."""
+    cfg, params = smollm
+    mono = _engine(cfg, params)
+    chunked = _engine(cfg, params, chunk=chunk)
+    for prompt in PROMPTS:
+        assert _serve(mono, prompt) == _serve(chunked, prompt), \
+            (chunk, len(prompt))
+        chunked.assert_no_page_leaks()
+        mono.assert_no_page_leaks()
+    assert chunked.pool.n_free == chunked.pool.n_pages - 1
+
+
+def test_chunked_with_prefix_cache_matches_cold(smollm):
+    """Chunked + radix prefix cache: parity for a chunk boundary inside
+    a prefix-cache hit, a CoW divergence mid-page, a miss, an extension,
+    and an identical re-run — while computing fewer tokens than cold."""
+    cfg, params = smollm
+    base = list(range(2, 22))                     # 20 tokens = 2.5 pages
+    cold = _engine(cfg, params)
+    warm = _engine(cfg, params, chunk=16, prefix=True, n_pool_pages=64)
+    assert _serve(cold, base) == _serve(warm, base)       # seed the cache
+    probes = (base[:16] + [55, 56],               # hit ends on page edge
+              base[:10] + [99, 98, 97],           # CoW inside page 2
+              [77, 78, 79, 80],                   # full miss
+              base + [30, 31, 32],                # extends past chunk bound
+              list(base))                         # identical re-run
+    for probe in probes:
+        before = warm.prefill_tokens_computed
+        assert _serve(cold, probe) == _serve(warm, probe), probe
+        hit = warm.prefill_tokens_computed - before < len(probe)
+        assert hit == (probe[0] == base[0])
+        warm.assert_no_page_leaks()
+        cold.assert_no_page_leaks()
+    assert warm.prefill_tokens_computed < warm.prefill_tokens_total
+
+
+def test_chunked_payload_segments_cover_pages(smollm):
+    """The payload's streaming segments partition its pages and its
+    computed tokens exactly; a cached prefix appears as a leading
+    zero-compute segment."""
+    cfg, params = smollm
+    eng = _engine(cfg, params, chunk=16, prefix=True, n_pool_pages=64)
+    prompt = list(range(400, 430))                # 30 tokens -> 2 chunks
+    r = Request(prompt_tokens=prompt, max_new_tokens=1)
+    f, p = eng.prefill_request(r)
+    assert [t for t, _ in p.chunks] == [16, 14]
+    assert sum(n for _, n in p.chunks) == len(p.page_ids)
+    eng.release_payload(p)
+    # warm re-run: 24 of 30 tokens cached (cap len-1 keeps one computed)
+    r2 = Request(prompt_tokens=list(prompt), max_new_tokens=1)
+    f2, p2 = eng.prefill_request(r2)
+    assert f2 == f
+    assert p2.cached_tokens > 0
+    assert p2.chunks[0][0] == 0                   # cached segment: 0 compute
+    assert p2.chunks[0][1] == p2.cached_tokens // eng.page_size
+    assert sum(t for t, _ in p2.chunks) == p2.n_tokens - p2.cached_tokens
+    assert sum(n for _, n in p2.chunks) == len(p2.page_ids)
+    eng.release_payload(p2)
+    eng.assert_no_page_leaks()
+
+
+def test_chunked_validation_and_fallbacks(smollm):
+    from repro.serving.engine import Engine
+    cfg, params = smollm
+    with pytest.raises(ValueError, match="paged"):
+        Engine(cfg, params, chunked_prefill=True)
+    with pytest.raises(ValueError, match="multiple"):
+        _engine(cfg, params, chunk=12)            # not a page multiple
+    mamba = get_config("mamba2-370m").reduced()
+    with pytest.raises(ValueError, match="attention-only"):
+        Engine(mamba, None, paged=True, chunked_prefill=True,
+               max_len=64, page_size=16, prefill_chunk=16)
+
+
+def test_chunked_multimodal_falls_back_to_monolithic():
+    """Multimodal prompts bypass the chunk loop (mm embeds can't resume
+    mid-sequence) but still serve correctly on a chunked engine."""
+    from repro.models.model import init_params
+    from repro.serving.engine import Engine
+    cfg = get_config("llava-next-mistral-7b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_batch=1, max_len=64, paged=True,
+                 page_size=8, chunked_prefill=True, prefill_chunk=16)
+    r = Request(prompt_tokens=[5, 6, 7, 8], max_new_tokens=3,
+                mm_payload=b"img", mm_tokens=8)
+    out = eng.run_request(r)
+    assert len(out) == 3
+    eng.assert_no_page_leaks()
+    # the monolithic fallback produces a segment-less payload
+    r2 = Request(prompt_tokens=[5, 6, 7, 8], max_new_tokens=1,
+                 mm_payload=b"img", mm_tokens=8)
+    import repro.models.frontend as FE
+    feats = FE.stub_embeddings(cfg, r2.mm_payload, r2.mm_tokens)[None]
+    _, p = eng.prefill_request(r2, feats, None)
+    assert p.chunks == []
+    eng.release_payload(p)
+    eng.assert_no_page_leaks()
+
+
+def test_failed_chunked_prefill_unwinds_all_refs(smollm, monkeypatch):
+    """A device error in any chunk must release the match refs, the CoW
+    ref, and every prior chunk's fresh pages."""
+    cfg, params = smollm
+    base = list(range(2, 22))
+    eng = _engine(cfg, params, chunk=8, prefix=True, n_pool_pages=64)
+    _serve(eng, base, n=1)
+    used = eng.pool.n_used
+
+    calls = {"n": 0}
+    real = eng._prefill_suffix
+
+    def boom_on_second(*a, **k):
+        calls["n"] += 1
+        if calls["n"] >= 2:                       # chunk 0 OK, chunk 1 dies
+            raise RuntimeError("injected device OOM")
+        return real(*a, **k)
+
+    monkeypatch.setattr(eng, "_prefill_suffix", boom_on_second)
+    probe = base[:10] + [99, 98, 97] + list(range(600, 610))  # CoW + 2 chunks
+    with pytest.raises(RuntimeError, match="injected"):
+        eng.prefill_request(Request(prompt_tokens=probe, max_new_tokens=1))
+    assert eng.pool.n_used == used
+    eng.assert_no_page_leaks()
+    monkeypatch.undo()
+    _serve(eng, probe, n=1)                       # retry succeeds cleanly
+    eng.assert_no_page_leaks()
+
+
+# ---------------------------------------------------------------------------
+# kv_transfer.plan_chunked: schedule semantics + edges
+# ---------------------------------------------------------------------------
+
+def test_plan_chunked_overlap_and_tail():
+    """Chunk k ships under chunk k+1's compute; only the last chunk's
+    wire time (plus its handshake) is exposed."""
+    p = plan_chunked(chunk_bytes=[100e6] * 4, chunk_compute=[0.1] * 4,
+                     handshake=1e-3, link_bw=50e9)
+    assert p.scheme == "chunked"
+    assert len(p.groups) == 4
+    for k, g in enumerate(p.groups):
+        assert g.t_ready == pytest.approx(0.1 * (k + 1))
+        if k < 3:                       # overlaps the next chunk's compute
+            assert g.t_done < p.groups[k + 1].t_ready
+    assert p.prefill_end == pytest.approx(0.4)
+    assert p.exposed_latency == pytest.approx(1e-3 + 100e6 / 50e9)
+    # 3 of 4 (handshake + wire) units hide under compute
+    assert p.overlap_ratio == pytest.approx(0.75)
+
+
+def test_plan_chunked_edges():
+    # empty chunk: no group, no handshake, but compute advances the clock
+    p = plan_chunked(chunk_bytes=[0.0, 8e6, 0.0, 8e6],
+                     chunk_compute=[0.0, 0.01, 0.01, 0.01],
+                     handshake=1e-3, link_bw=1e9)
+    assert len(p.groups) == 2
+    assert [g.start for g in p.groups] == [1, 3]
+    assert p.kv_latency == pytest.approx(2 * 1e-3 + 2 * 8e6 / 1e9)
+    # single-page prompt: one segment, fully exposed past its compute
+    q = plan_chunked(chunk_bytes=[4e6], chunk_compute=[0.01],
+                     handshake=1e-3, link_bw=1e9)
+    assert len(q.groups) == 1
+    assert q.total_done == pytest.approx(0.01 + 1e-3 + 4e6 / 1e9)
+    assert q.overlap_ratio == pytest.approx(0.0, abs=1e-9)
+    # cached-prefix segment (zero compute) ships at t=0, under ALL compute
+    r = plan_chunked(chunk_bytes=[4e6, 4e6], chunk_compute=[0.0, 1.0],
+                     handshake=1e-3, link_bw=1e9)
+    assert r.groups[0].t_ready == 0.0
+    assert r.groups[0].t_done < 1.0
+    with pytest.raises(ValueError, match="segments"):
+        plan_chunked(chunk_bytes=[1.0], chunk_compute=[0.1, 0.1],
+                     handshake=0.0, link_bw=1e9)
+
+
+def test_plan_chunked_final_ragged_chunk_page_rounding():
+    """page_bytes rounds every segment (here the ragged tail) up to whole
+    pool pages — the wire never ships a partial page."""
+    page = 3e6
+    p = plan_chunked(chunk_bytes=[9e6, 4e6], chunk_compute=[0.01, 0.01],
+                     handshake=1e-3, link_bw=1e9, page_bytes=page)
+    assert p.groups[0].nbytes == pytest.approx(9e6)       # already aligned
+    assert p.groups[1].nbytes == pytest.approx(6e6)       # 4e6 -> 2 pages
+    for g in p.groups:
+        assert g.nbytes % page == pytest.approx(0.0, abs=1e-6)
+
+
+def test_chunked_ttft_beats_serialized_baseline():
+    """Acceptance: at >= 4 chunks the streaming schedule's TTFT gate
+    (total_done) is strictly below the serialized prefill-then-transfer
+    baseline, and the margin grows with prompt length."""
+    big = get_config("openpangu-7b-vl")
+    cost = CostModel(big, RDMA, page_tokens=16)
+    C = 1024
+    margins = []
+    for L in (4096, 8192, 16384):
+        toks = [C] * (L // C) + ([L % C] if L % C else [])
+        assert len(toks) >= 4
+        per_tok = cost.kv_bytes_per_token()
+        ch = plan_chunked(chunk_bytes=[c * per_tok for c in toks],
+                          chunk_compute=cost.chunk_prefill_times(L, toks),
+                          handshake=cost.hw.handshake,
+                          link_bw=cost.hw.link_bw,
+                          page_bytes=cost.kv_page_bytes())
+        ser = plan("one_shot", n_layers=big.n_layers,
+                   bytes_per_layer=cost.kv_bytes(L) / big.n_layers,
+                   per_layer_compute=cost.per_layer_prefill_time(L),
+                   handshake=cost.hw.handshake, link_bw=cost.hw.link_bw,
+                   page_bytes=cost.kv_page_bytes_per_layer())
+        assert ch.total_done < ser.total_done, L
+        margins.append(ser.total_done - ch.total_done)
+    assert margins[-1] > margins[0]
+
+
+def test_chunk_prefill_times_conserve_monolithic_compute():
+    """Chunk times sum to the monolithic prefill plus one launch overhead
+    per extra chunk; zero-token (cached) segments cost nothing; later
+    chunks cost more (quadratic attention against a longer context)."""
+    big = get_config("openpangu-7b-vl")
+    cost = CostModel(big)
+    L, C = 2048, 512
+    toks = [C] * 4
+    times = cost.chunk_prefill_times(L, toks)
+    mono = cost.prefill_time(L)
+    assert sum(times) == pytest.approx(mono + 3 * cost.hw.launch_overhead)
+    assert times == sorted(times)
+    with_cached = cost.chunk_prefill_times(L, [0] + toks[1:],
+                                           cached_prefix=512)
+    assert with_cached[0] == 0.0
+    assert sum(with_cached) == pytest.approx(
+        cost.prefill_time(L, cached_prefix=512)
+        + 2 * cost.hw.launch_overhead)
+
+
+# ---------------------------------------------------------------------------
+# cluster: streaming overlap accounting end-to-end
+# ---------------------------------------------------------------------------
+
+def test_cluster_chunked_streaming_accounting(smollm):
+    """EPDCluster(chunked_prefill=True): same tokens as the plain paged
+    cluster, chunked transfer plans with chunk-k shipping before chunk
+    k+1 finishes compute, and no leaked pages."""
+    from repro.core.cluster import EPDCluster
+    cfg, params = smollm
+
+    def run(chunked):
+        cl = EPDCluster(cfg, params, max_batch=2, max_len=64, paged=True,
+                        page_size=8, chunked_prefill=chunked,
+                        prefill_chunk=16)
+        reqs = [Request(prompt_tokens=list(range(3, 45 + i)),
+                        max_new_tokens=4) for i in range(2)]
+        for r in reqs:
+            cl.submit(r)
+        cl.run_until_done()
+        return cl, [r.output_tokens for r in reqs]
+
+    base, outs_b = run(False)
+    ch, outs_c = run(True)
+    assert outs_b == outs_c
+    assert len(ch.report.kv_plans) == 2
+    for p in ch.report.kv_plans:
+        assert p.scheme == "chunked"
+        assert len(p.groups) >= 2
+        # chunk k's transfer is in flight before the LAST chunk's compute
+        # finishes — the compute/transfer pipeline the scheme exists for
+        assert p.groups[0].t_send < p.prefill_end + \
+            ch.cost.hw.handshake + 1e-12
+        # payloads are page-quantized
+        page_bytes = ch.cost.kv_page_bytes()
+        for g in p.groups:
+            assert g.nbytes % page_bytes == pytest.approx(0.0, abs=1e-6)
+    ch.prefill_engine.assert_no_page_leaks()
+    ch.decode_engine.assert_no_page_leaks()
+    assert ch.prefill_engine.pool.n_used == 0
+    assert ch.decode_engine.pool.n_used == 0
+
+
+# ---------------------------------------------------------------------------
+# simulator A/B: chunked mode lowers modeled TTFT at long prompt lengths
+# ---------------------------------------------------------------------------
+
+def test_simulator_chunked_lowers_ttft_on_long_prompts():
+    from repro.core.simulator import SHAREGPT_4O, simulate
+    model = get_config("openpangu-7b-vl")
+    ds = dataclasses.replace(SHAREGPT_4O, mm_fraction=0.0,
+                             text_tokens_mean=4096.0)
+    kw = dict(rate=0.5, n_requests=24, seed=5, kv_page_tokens=16, hw=RDMA)
+    ser = simulate(model, "E-P-D", ds, kv_scheme="one_shot", **kw)
+    ch = simulate(model, "E-P-D", ds, chunked_prefill=True,
+                  prefill_chunk_tokens=1024, **kw)
+    assert ch.mean_ttft_ms < ser.mean_ttft_ms
+    assert ch.p99_ttft_ms < ser.p99_ttft_ms
+
+
+def test_simulator_short_prompts_skip_chunking():
+    """Prompts that fit in one chunk never pay the chunking overhead:
+    the schedule falls back to the configured scheme."""
+    from repro.core.simulator import SimConfig, Simulator, gen_requests
+    from repro.core.simulator import SHAREGPT_4O
+    model = get_config("openpangu-7b-vl")
+    ds = dataclasses.replace(SHAREGPT_4O, mm_fraction=0.0,
+                             text_tokens_mean=32.0)
+    cfg = SimConfig(deployment="E-P-D", chunked_prefill=True,
+                    prefill_chunk_tokens=4096)
+    sim = Simulator(model, cfg)
+    sim.run(gen_requests(ds, 16, rate=2.0, seed=1))
+    assert sim.kv_plans
+    assert all(p.scheme == "grouped" for p in sim.kv_plans)

@@ -16,9 +16,11 @@ def llava():
     return cfg, params
 
 
-def test_epd_pipeline_end_to_end(llava):
+@pytest.mark.parametrize("paged", [False, True])
+def test_epd_pipeline_end_to_end(llava, paged):
     cfg, params = llava
-    cluster = EPDCluster(cfg, params, max_batch=4, max_len=64)
+    cluster = EPDCluster(cfg, params, max_batch=4, max_len=64,
+                         paged=paged, page_size=8)
     reqs = [Request(prompt_tokens=list(range(3, 10)), max_new_tokens=5,
                     mm_payload=b"img-%d" % (i % 2), mm_tokens=8)
             for i in range(4)]
@@ -32,6 +34,12 @@ def test_epd_pipeline_end_to_end(llava):
     # 2 unique images across 4 mm requests -> 2 encodes, 2 dedup hits
     assert cluster.store.stats.puts == 2
     assert cluster.store.stats.hits == 2
+    if paged:
+        # leak audit: both pools drained, every refcount accounted for
+        cluster.prefill_engine.assert_no_page_leaks()
+        cluster.decode_engine.assert_no_page_leaks()
+        assert cluster.prefill_engine.pool.n_used == 0
+        assert cluster.decode_engine.pool.n_used == 0
 
 
 def test_epd_equals_monolithic_outputs(llava):
@@ -54,7 +62,8 @@ def test_epd_equals_monolithic_outputs(llava):
 
 def test_fault_tolerant_recompute(llava):
     cfg, params = llava
-    cluster = EPDCluster(cfg, params, max_batch=2, max_len=64)
+    cluster = EPDCluster(cfg, params, max_batch=2, max_len=64,
+                         paged=True, page_size=8)
     r1 = Request(prompt_tokens=[1, 2, 3], max_new_tokens=4,
                  mm_payload=b"imgX", mm_tokens=8)
     cluster.submit(r1)
@@ -68,6 +77,9 @@ def test_fault_tolerant_recompute(llava):
     cluster.run_until_done()
     assert cluster.report.recomputes == 1
     assert r2.output_tokens == r1.output_tokens    # recompute is exact
+    # the recompute path must release its pages like any other request
+    cluster.prefill_engine.assert_no_page_leaks()
+    cluster.decode_engine.assert_no_page_leaks()
 
 
 def test_kv_plans_recorded(llava):

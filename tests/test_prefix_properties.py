@@ -1,6 +1,7 @@
-"""Hypothesis property tests for the radix-tree prefix cache:
-ref-count conservation, branch integrity, and match/page agreement under
-arbitrary interleavings of insert / release / evict."""
+"""Hypothesis property tests for the radix-tree prefix cache and the
+chunked paged-prefill engine: ref-count conservation, branch integrity,
+and match/page agreement under arbitrary interleavings of (chunked)
+prefills, inserts, decode steps, early-EOS releases, and evictions."""
 import pytest
 
 hypothesis = pytest.importorskip("hypothesis")
@@ -9,6 +10,7 @@ from hypothesis import given, settings
 
 from repro.serving.kv_pool import PagePool
 from repro.serving.prefix_cache import PrefixCache
+from repro.serving.request import Request
 
 
 # ---------------------------------------------------------------------------
@@ -83,5 +85,95 @@ def test_tree_match_is_true_prefix(seqs):
                 lcp += 1
             best = max(best, min(lcp, full))
         assert n == best
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: chunked engine — refcount conservation with REAL compute
+# ---------------------------------------------------------------------------
+
+# one engine shared across examples (jit caches amortized); every example
+# starts from a full reset so examples stay independent / reproducible
+_ENGINE = None
+
+
+def _chunked_engine():
+    global _ENGINE
+    if _ENGINE is None:
+        import jax
+        from repro.configs import get_config
+        from repro.models.model import init_params
+        from repro.serving.engine import Engine
+        cfg = get_config("smollm-135m").reduced()
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        # deliberately tight pool (19 usable pages) so interleavings hit
+        # exhaustion, eviction-under-pressure, and the chunk-loop unwind
+        _ENGINE = Engine(cfg, params, max_batch=2, max_len=32, paged=True,
+                         page_size=4, prefix_cache=True,
+                         chunked_prefill=True, prefill_chunk=8,
+                         n_pool_pages=20)
+    return _ENGINE
+
+
+def _reset(eng):
+    for i, r in enumerate(eng.slots):
+        if r is not None:
+            eng.slots[i] = None
+            eng._release_slot(i)
+    eng.prefix_cache.evict(eng.pool.n_pages)
+    eng.prefix_cache = PrefixCache(eng.page_size, eng.pool)
+    assert eng.pool.n_used == 0, "reset must drain the pool"
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(
+    st.sampled_from(["prefill", "insert", "decode", "eos", "release",
+                     "evict"]),
+    st.integers(0, 3), st.integers(1, 16)), min_size=1, max_size=14))
+def test_chunked_engine_refcount_conservation(ops):
+    """Pool accounting stays exact under arbitrary interleavings of
+    CHUNKED prefills (family-shared prefixes: cache hits, CoW), decode
+    steps (page growth), early-EOS slot releases, payload releases, and
+    prefix-cache evictions — including pool-exhaustion unwinds."""
+    eng = _chunked_engine()
+    _reset(eng)
+    pending = []                            # prefilled, not yet inserted
+    for op, fam, ln in ops:
+        if op == "prefill":
+            # family gives shared prefixes (hits + intra-page divergence)
+            prompt = [fam * 1000 + j // 2 for j in range(ln)]
+            r = Request(prompt_tokens=prompt, max_new_tokens=4)
+            try:
+                f, p = eng.prefill_request(r)
+                pending.append((r, f, p))
+            except RuntimeError:
+                pass                        # exhausted: unwind, no leaks
+        elif op == "insert" and pending:
+            r, f, p = pending.pop(fam % len(pending))
+            try:
+                eng.insert(r, p, f)
+            except RuntimeError:            # no free slot: stays retryable
+                pending.append((r, f, p))
+        elif op == "decode" and eng.n_active:
+            try:
+                eng.decode_step()
+            except RuntimeError:
+                pass                        # growth exhausted: atomic
+        elif op == "eos":
+            active = [i for i, r in enumerate(eng.slots) if r is not None]
+            if active:
+                i = active[fam % len(active)]
+                eng.slots[i] = None
+                eng._release_slot(i)        # the early-EOS release path
+        elif op == "release" and pending:
+            _, _, p = pending.pop(fam % len(pending))
+            eng.release_payload(p)
+        elif op == "evict":
+            eng.prefix_cache.evict(ln)
+        # invariant: allocator == slots + tree + un-inserted payloads
+        eng.assert_no_page_leaks(
+            extra_holders=[p.page_ids for _, _, p in pending])
+    for _, _, p in pending:
+        eng.release_payload(p)
+    eng.assert_no_page_leaks()
 
 

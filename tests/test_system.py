@@ -17,8 +17,10 @@ from repro.serving.engine import Engine
 from repro.serving.request import Request
 
 
-def test_disaggregation_is_transparent_to_outputs():
-    """Tokens must not depend on the serving topology."""
+@pytest.mark.parametrize("mode", ["dense", "paged", "chunked"])
+def test_disaggregation_is_transparent_to_outputs(mode):
+    """Tokens must not depend on the serving topology — dense, paged, or
+    chunked+prefix-cached prefill all reproduce the monolithic engine."""
     cfg = get_config("smollm-135m").reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
 
@@ -31,7 +33,13 @@ def test_disaggregation_is_transparent_to_outputs():
         mono.run_request(r)
         mono_out.append(r.output_tokens)
 
-    cluster = EPDCluster(cfg, params, max_batch=4, max_len=64)
+    kw = {}
+    if mode != "dense":
+        kw = dict(paged=True, page_size=8)
+    if mode == "chunked":
+        kw.update(chunked_prefill=True, prefill_chunk=8, prefix_cache=True,
+                  n_prefill_pool_pages=33)
+    cluster = EPDCluster(cfg, params, max_batch=4, max_len=64, **kw)
     reqs = [Request(prompt_tokens=list(p), max_new_tokens=6) for p in prompts]
     for r in reqs:
         cluster.submit(r)
@@ -39,6 +47,12 @@ def test_disaggregation_is_transparent_to_outputs():
     epd_out = [r.output_tokens for r in reqs]
 
     assert mono_out == epd_out
+    if mode != "dense":
+        # page-refcount audit: nothing may outlive the drained requests
+        # but the prefix tree's retentions
+        cluster.prefill_engine.assert_no_page_leaks()
+        cluster.decode_engine.assert_no_page_leaks()
+        assert cluster.decode_engine.pool.n_used == 0
 
 
 def test_paper_headline_epd_beats_pd_on_effective_throughput():
