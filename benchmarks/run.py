@@ -37,6 +37,10 @@ def main() -> None:
         from benchmarks.chunked_prefill_bench import bench_chunked_prefill
         for row in bench_chunked_prefill():
             print(row)
+    if only is None or "preempt" in only:
+        from benchmarks.preemption_bench import bench_preemption
+        for row in bench_preemption():
+            print(row)
     print(f"# total {time.time() - t_start:.1f}s")
 
 

@@ -36,6 +36,7 @@ from repro.core.kv_transfer import (TransferPlan, plan as kv_plan,
 from repro.core.mm_store import MMStore
 from repro.models import frontend as FE
 from repro.serving.engine import Engine
+from repro.serving.kv_pool import PoolExhausted
 from repro.serving.request import Request
 
 
@@ -48,6 +49,10 @@ class ClusterReport:
     completed: List[Request] = field(default_factory=list)
     kv_plans: List[TransferPlan] = field(default_factory=list)
     recomputes: int = 0
+    # page-level preemption on the Decode engine
+    preemptions: int = 0
+    swapped_pages: int = 0           # host-link pages moved (out + in)
+    admission_denials: int = 0       # inserts denied by the decode pool
 
     @property
     def mean_kv_overlap(self) -> float:
@@ -64,7 +69,9 @@ class EPDCluster:
                  hw: Hardware = V5E, paged: bool = False,
                  page_size: int = 16, prefix_cache: bool = False,
                  n_prefill_pool_pages: Optional[int] = None,
-                 chunked_prefill: bool = False, prefill_chunk: int = 32):
+                 chunked_prefill: bool = False, prefill_chunk: int = 32,
+                 preemption: bool = False,
+                 n_decode_pool_pages: Optional[int] = None):
         self.cfg = cfg
         self.store = MMStore()
         self.cost = CostModel(cfg, hw,
@@ -85,9 +92,15 @@ class EPDCluster:
                                      n_pool_pages=n_prefill_pool_pages,
                                      chunked_prefill=chunked_prefill,
                                      prefill_chunk=prefill_chunk)
+        # Decode engine: preemption=True turns decode-side pool pressure
+        # into page-level swap-to-host + resume instead of a pool error;
+        # n_decode_pool_pages sizes the pool below worst-case for
+        # overload experiments.
         self.decode_engine = Engine(cfg, params, max_batch=max_batch,
                                     max_len=max_len, paged=paged,
-                                    page_size=page_size)
+                                    page_size=page_size,
+                                    n_pool_pages=n_decode_pool_pages,
+                                    preemption=preemption)
         self.report = ClusterReport()
         self._pending: List[Request] = []
 
@@ -160,28 +173,49 @@ class EPDCluster:
                         handshake=self.cost.hw.handshake,
                         link_bw=self.cost.hw.link_bw,
                         page_bytes=self.cost.kv_page_bytes_per_layer())
-        self.report.kv_plans.append(p)
+        # insert may preempt a decode victim to make room; only a
+        # successful admission records the transfer plan
         self.decode_engine.insert(req, caches, first)
+        self.report.kv_plans.append(p)
 
     # ---- full pipeline ----
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Run E->P and admit into Decode. Returns False when the decode
+        pool denied admission (exhausted even after preemption would
+        leave no active slot): the request re-queues at the front and
+        its payload is released — it re-prefills on retry (the prefix
+        cache, when enabled, makes that cheap)."""
         if not self.decode_engine.free_slots():
             self._pending.append(req)
-            return
+            return True
         key = self.encode(req)
         first, caches = self.prefill(req, key)
-        self.transfer_and_insert(req, caches, first)
+        try:
+            self.transfer_and_insert(req, caches, first)
+        except PoolExhausted:
+            # insert raises before any mutation: no token was recorded
+            if self.paged:
+                self.prefill_engine.release_payload(caches)
+            self.report.admission_denials += 1
+            self._pending.insert(0, req)
+            return False
+        return True
 
     def run_until_done(self, max_steps: int = 1000) -> List[Request]:
         steps = 0
         done: List[Request] = []
-        while ((self.decode_engine.n_active or self._pending)
-               and steps < max_steps):
+        while ((self.decode_engine.n_active or self._pending
+                or self.decode_engine.preempted) and steps < max_steps):
             for r, _t, d in self.decode_engine.decode_step():
                 if d:
                     done.append(r)
             while self._pending and self.decode_engine.free_slots():
-                self.submit(self._pending.pop(0))
+                if not self.submit(self._pending.pop(0)):
+                    break                  # denied: wait for decode to drain
             steps += 1
         self.report.completed.extend(done)
+        self.report.preemptions = self.decode_engine.preempt_count
+        self.report.swapped_pages = (
+            self.decode_engine.swap_out_pages_total
+            + self.decode_engine.swap_in_pages_total)
         return done

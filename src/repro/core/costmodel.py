@@ -33,6 +33,11 @@ class Hardware:
     tp_efficiency: float = 0.7        # per-doubling compute scaling under TP
     launch_overhead: float = 2e-4     # per-step host/launch overhead
     handshake: float = 2e-3           # KV-transfer metadata handshake (paper §3.3)
+    # device<->host staging link for page-level preemption swaps (PCIe
+    # 4.0 x16 class) + the per-swap fixed cost (descriptor build, pinned
+    # staging-buffer handoff, allocator round trip)
+    host_bw: float = 25.6e9
+    swap_latency: float = 0.3e-3
     # cross-instance dispatch overhead (scheduler tick, batch formation,
     # local cache write) — the "scheduling latency" of the paper's Table 3:
     # ~30 ms base plus a store-bandwidth write of the feature.
@@ -158,6 +163,21 @@ class CostModel:
         t_c = flops / self._chip_rate(chips, tp)
         t = max(t_m, t_c)
         return t + self.hw.launch_overhead + self._tp_penalty(tp, cfg.n_layers)
+
+    def swap_time(self, n_pages: int) -> float:
+        """One-direction host-link time to move ``n_pages`` of KV between
+        the device pool and host memory: the service-time cost of a
+        page-level preemption swap-out, or of the swap-in at re-fault.
+        The simulator charges it into the decode stream (the honest
+        pessimistic placement: the pool pages are not reusable until the
+        copy lands)."""
+        if n_pages <= 0:
+            return 0.0
+        if not self.page_tokens:
+            raise ValueError("swap_time needs a paged layout "
+                             "(page_tokens > 0)")
+        return (self.hw.swap_latency
+                + n_pages * self.kv_page_bytes() / self.hw.host_bw)
 
     def _tp_penalty(self, tp: int, n_layers: int) -> float:
         """Inter-chip sync overhead of tensor parallelism (2 allreduce/layer).

@@ -19,7 +19,7 @@ the request to an idle replica rather than pinning one instance.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 from repro.core.deployment import Deployment, InstanceSpec
 from repro.serving.prefix_cache import PrefixCache
@@ -29,6 +29,57 @@ from repro.serving.request import Request
 # load-metric weight of one queued prompt token; cached-prefix tokens
 # are credited at the same weight in cache-aware dispatch
 PENDING_TOKEN_WEIGHT = 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Page-level preemption: victim selection
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class VictimCandidate:
+    """One active decode request considered for page-level preemption.
+
+    slot          — engine slot index (or request id in the simulator);
+                    the deterministic tiebreak.
+    pages_lost    — device pages released if this request is preempted:
+                    the private pages that must be swapped to host and
+                    re-faulted later (tree-shared pages cost nothing —
+                    they are merely unref'd). This is the preemption
+                    COST, not the reclaim estimate.
+    priority      — the request's priority (higher survives longer).
+    made_progress — has it produced at least one token since its last
+                    resume (always True for a never-preempted request)?
+    preempt_count — how many times it has been preempted already.
+    """
+
+    slot: int
+    pages_lost: int
+    priority: int = 0
+    made_progress: bool = True
+    preempt_count: int = 0
+
+
+def pick_preemption_victim(cands: Sequence[VictimCandidate]
+                           ) -> Optional[VictimCandidate]:
+    """Choose which active request to preempt when a page allocation
+    cannot be satisfied (engine decode growth / admission, simulator
+    decode capacity).
+
+    Policy: lowest request priority first, then fewest-pages-lost-first
+    (the victim whose eviction costs the least swap traffic and
+    re-fault work), slot index as the deterministic tiebreak.
+
+    Starvation guard: a request that was already preempted and has not
+    produced a single token since its last resume is exempt — preempting
+    it again would undo a resume that never ran (swap ping-pong), and
+    under sustained pressure it would never finish. Returns None when no
+    candidate is eligible; the caller must then deny the allocation
+    (raise/queue) instead of thrashing."""
+    eligible = [c for c in cands
+                if c.made_progress or c.preempt_count == 0]
+    if not eligible:
+        return None
+    return min(eligible, key=lambda c: (c.priority, c.pages_lost, c.slot))
 
 
 @dataclass

@@ -39,8 +39,10 @@ from repro.core.events import EventLoop
 from repro.core.kv_transfer import (plan as kv_plan,
                                     plan_chunked as kv_plan_chunked)
 from repro.core.mm_store import MMStore
-from repro.core.scheduler import Router
+from repro.core.scheduler import (Router, VictimCandidate,
+                                  pick_preemption_victim)
 from repro.models.frontend import encode_tokens_for_image
+from repro.serving.kv_pool import pages_for
 from repro.serving.request import Request
 
 
@@ -132,6 +134,16 @@ class SimConfig:
     # chunk costs one launch overhead — the price of streaming.
     chunked_prefill: bool = False
     prefill_chunk_tokens: int = 256
+    # Decode-side KV capacity + page-level preemption. decode_kv_pages
+    # bounds each Decode instance's page pool (0 = unbounded, the
+    # legacy behavior); admission then checks pages, not just batch
+    # slots. When decode growth overflows the pool mid-stream:
+    # preemption=False kills the victim (the pre-preemption baseline),
+    # preemption=True swaps it to host (CostModel.swap_time charged in
+    # the decode stream) and resumes it when pages free up — same
+    # victim policy as the real engine (scheduler.pick_preemption_victim).
+    decode_kv_pages: int = 0
+    preemption: bool = False
 
 
 @dataclass
@@ -148,6 +160,9 @@ class SimMetrics:
     store_hit_rate: float
     ep_overlap_ratio: float
     prefix_hit_rate: float = 0.0       # cached prefill tokens / text tokens
+    completed_requests: int = 0        # finished with full output
+    killed_requests: int = 0           # dropped by decode-OOM (no preemption)
+    n_preemptions: int = 0             # page-level preempt/swap events
 
     def slo_attainment(self, ttft_ms: float, tpot_ms: float) -> float:
         ok = sum(r.meets_slo(ttft_ms, tpot_ms) for r in self.requests)
@@ -178,6 +193,11 @@ class _Instance:
         self.queue: List[Tuple[str, Request]] = []    # E / P tasks
         self.decode_batch: Dict[int, Tuple[Request, int]] = {}
         self.decode_wait: List[Request] = []
+        # page-level preemption: (req, remaining) parked with their KV
+        # swapped to host, FIFO resume; marks gate the starvation guard
+        self.preempted: List[Tuple[Request, int]] = []
+        self._resume_marks: Dict[int, int] = {}
+        self._swap_penalty = 0.0      # host-link time owed by the next iter
         self.busy = False
         self.running_stage: Optional[str] = None
 
@@ -187,8 +207,35 @@ class _Instance:
         self.sim.router.on_enqueue(self.spec.name, req.total_prompt_len)
         self._kick()
 
-    def join_decode(self, req: Request) -> None:
+    # ---- decode KV-capacity accounting (paged pool model) ----
+    def _held_pages(self, req: Request) -> int:
+        page = self.sim.cfg.kv_page_tokens or 16
+        return pages_for(req.total_prompt_len + len(req.output_tokens), page)
+
+    def _pages_used(self) -> int:
+        return sum(self._held_pages(r) for r, _ in self.decode_batch.values())
+
+    def _can_admit(self, req: Request) -> bool:
+        """Preemption-aware decode admission: a request joins the batch
+        only when both a batch slot AND its KV pages are available —
+        overflow waits instead of being force-fed into a full pool."""
         if len(self.decode_batch) >= self.sim.cfg.decode_batch_max:
+            return False
+        cap = self.sim.cfg.decode_kv_pages
+        return not cap or self._pages_used() + self._held_pages(req) <= cap
+
+    def join_decode(self, req: Request) -> None:
+        cap = self.sim.cfg.decode_kv_pages
+        if cap and self._held_pages(req) > cap:
+            # bigger than the whole pool: unservable at this capacity in
+            # EITHER mode — drop it now instead of head-of-line blocking
+            # decode_wait forever (preemption can't shrink a request)
+            req.killed = True
+            req.t_done = self.sim.loop.now
+            self.sim.n_killed += 1
+            self.sim.done.append(req)
+            return
+        if not self._can_admit(req):
             self.decode_wait.append(req)
             return
         self.decode_batch[req.request_id] = (req, req.max_new_tokens - 1)
@@ -261,6 +308,10 @@ class _Instance:
             dur = sim.cost.decode_step_time(batch, kv, self.spec.chips,
                                             self.spec.tp)
             dur *= self._interference("D")
+            # swap traffic owed by preempt/resume events serializes into
+            # the decode stream (pages are unusable until the copy lands)
+            dur += self._swap_penalty
+            self._swap_penalty = 0.0
             loop.after(dur, self._finish_decode_iter)
             sim.router.on_busy_until(self.spec.name, loop.now + dur)
         else:
@@ -378,6 +429,36 @@ class _Instance:
             emit()
         self._next()
 
+    # ---- decode-OOM handling: preempt (swap) or kill ----
+    def _pick_victim(self, guarded: bool) -> Optional[int]:
+        cands = []
+        for rid, (req, _rem) in self.decode_batch.items():
+            mark = self._resume_marks.get(rid)
+            cands.append(VictimCandidate(
+                slot=rid, pages_lost=self._held_pages(req),
+                priority=req.priority,
+                made_progress=(mark is None
+                               or len(req.output_tokens) > mark),
+                preempt_count=req.n_preempts if guarded else 0))
+        v = pick_preemption_victim(cands)
+        return None if v is None else v.slot
+
+    def _preempt(self, rid: int) -> None:
+        req, remaining = self.decode_batch.pop(rid)
+        self.sim.router.on_decode_leave(self.spec.name)
+        req.n_preempts += 1
+        self.sim.n_preempted += 1
+        self._swap_penalty += self.sim.cost.swap_time(self._held_pages(req))
+        self.preempted.append((req, remaining))
+
+    def _kill(self, rid: int) -> None:
+        req, _ = self.decode_batch.pop(rid)
+        self.sim.router.on_decode_leave(self.spec.name)
+        req.killed = True
+        req.t_done = self.sim.loop.now
+        self.sim.n_killed += 1
+        self.sim.done.append(req)
+
     def _finish_decode_iter(self) -> None:
         sim = self.sim
         finished = []
@@ -392,17 +473,46 @@ class _Instance:
                 self.decode_batch[rid] = (req, remaining)
         for rid in finished:
             del self.decode_batch[rid]
+            self._resume_marks.pop(rid, None)
             sim.router.on_decode_leave(self.spec.name)
-        while (self.decode_wait and
-               len(self.decode_batch) < sim.cfg.decode_batch_max):
+        # KV-capacity pressure from this iteration's growth: preempt
+        # victims to host (resumable) or kill them (the baseline) —
+        # never the last active request (it over-commits instead)
+        cap = sim.cfg.decode_kv_pages
+        while cap and self._pages_used() > cap and len(self.decode_batch) > 1:
+            rid = self._pick_victim(guarded=sim.cfg.preemption)
+            if rid is None:
+                break                 # all starvation-guarded: over-commit
+            if sim.cfg.preemption:
+                self._preempt(rid)
+            else:
+                self._kill(rid)
+        # resume preempted requests first (FIFO — they hold progress and
+        # already paid for their pages once), then drain the admit queue
+        while (self.preempted
+               and len(self.decode_batch) < sim.cfg.decode_batch_max):
+            req, remaining = self.preempted[0]
+            if cap and self._pages_used() + self._held_pages(req) > cap:
+                break
+            self.preempted.pop(0)
+            self._swap_penalty += sim.cost.swap_time(self._held_pages(req))
+            self.decode_batch[req.request_id] = (req, remaining)
+            self._resume_marks[req.request_id] = len(req.output_tokens)
+            sim.router.on_decode_join(self.spec.name)
+        while self.decode_wait and self._can_admit(self.decode_wait[0]):
             self.join_decode(self.decode_wait.pop(0))
         self._next()
 
 
 class Simulator:
     def __init__(self, model: ModelConfig, cfg: SimConfig):
+        import dataclasses
         from repro.core.deployment import scale
         self.model = model
+        if cfg.decode_kv_pages and not cfg.kv_page_tokens:
+            # capacity is counted in pages: the page size must be real so
+            # held-page math and swap_time agree with the paged layout
+            cfg = dataclasses.replace(cfg, kv_page_tokens=16)
         self.cfg = cfg
         dep = parse(cfg.deployment) if isinstance(cfg.deployment, str) \
             else cfg.deployment
@@ -419,6 +529,8 @@ class Simulator:
         self.kv_plans: list = []
         self.prefix_hit_tokens = 0.0
         self.prefix_prompt_tokens = 0.0
+        self.n_preempted = 0
+        self.n_killed = 0
         if cfg.prefix_cache:
             from repro.serving.prefix_cache import PrefixCache
             page = cfg.kv_page_tokens or 16
@@ -505,6 +617,9 @@ class Simulator:
             ep_overlap_ratio=self.prefetcher.mean_overlap_ratio,
             prefix_hit_rate=(self.prefix_hit_tokens / self.prefix_prompt_tokens
                              if self.prefix_prompt_tokens else 0.0),
+            completed_requests=sum(not r.killed for r in self.done),
+            killed_requests=self.n_killed,
+            n_preemptions=self.n_preempted,
         )
 
 
@@ -517,7 +632,9 @@ def simulate(model: ModelConfig, deployment: str, dataset: DatasetSpec,
              prefix_cache: bool = False,
              cache_aware_routing: bool = True,
              chunked_prefill: bool = False,
-             prefill_chunk_tokens: int = 256) -> SimMetrics:
+             prefill_chunk_tokens: int = 256,
+             decode_kv_pages: int = 0,
+             preemption: bool = False) -> SimMetrics:
     """Run one deployment against a trace injected at ``rate`` req/s.
 
     per_chip_rate=True multiplies the rate by the deployment's chip count
@@ -532,7 +649,9 @@ def simulate(model: ModelConfig, deployment: str, dataset: DatasetSpec,
                     prefix_cache=prefix_cache,
                     cache_aware_routing=cache_aware_routing,
                     chunked_prefill=chunked_prefill,
-                    prefill_chunk_tokens=prefill_chunk_tokens)
+                    prefill_chunk_tokens=prefill_chunk_tokens,
+                    decode_kv_pages=decode_kv_pages,
+                    preemption=preemption)
     sim = Simulator(model, cfg)
     if per_chip_rate:
         rate = rate * sim.deployment.n_chips

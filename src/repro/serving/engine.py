@@ -40,6 +40,17 @@ Two KV layouts:
   constraints as the prefix cache; multimodal requests fall back to the
   monolithic paged path.
 
+* paged + ``preemption=True`` — KV pressure (decode growth past page
+  boundaries, cross-engine insert admission) no longer kills with a pool
+  error: a victim slot (lowest priority, fewest private pages lost,
+  never the last active one, starvation-guarded) is preempted at page
+  granularity — prefix-shared pages are unref'd back to the tree,
+  private pages are swapped to the pool's host backing store — and the
+  request parks until ``decode_step`` can re-fault it: shared pages are
+  re-ref'd from the tree (or recomputed if evicted meanwhile), private
+  pages swap back in, and decode resumes from the exact saved position.
+  Greedy outputs are bit-identical to an uninterrupted run.
+
 The EPD disaggregation layer (repro.core) drives one or more Engines: the
 Encode stage produces features into the MM Store, Prefill engines run
 ``prefill_request`` and export their caches, Decode engines import caches
@@ -47,21 +58,49 @@ via ``insert`` and run ``decode_step``.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.scheduler import VictimCandidate, pick_preemption_victim
 from repro.models import frontend as FE
 from repro.models.transformer import make_caches
-from repro.serving.kv_pool import PagePool, PagedKVPayload
+from repro.serving.kv_pool import (PagePool, PagedKVPayload, PoolExhausted,
+                                   SwapHandle)
 from repro.serving.prefix_cache import MatchResult, PrefixCache
 from repro.serving.request import Request
 from repro.serving.steps import (make_decode_fn, make_insert_fn,
-                                 make_page_copy_fn, make_paged_insert_fn,
+                                 make_page_copy_fn, make_page_gather_fn,
+                                 make_page_scatter_fn, make_paged_insert_fn,
                                  make_pool_page_copy_fn, make_prefill_fn)
+
+
+@dataclass
+class PreemptedRequest:
+    """A decode request parked off-device by page-level preemption.
+
+    handle         — swap ticket for the private pages (KV content on the
+                     host; None when every page was tree-shared).
+    n_shared_pages — leading block-table pages that were shared with the
+                     prefix tree at preemption time: they were unref'd,
+                     not swapped, and are re-ref'd (or recomputed, if the
+                     tree evicted them meanwhile) on resume.
+    n_pages        — total pages the block table held (shared + private).
+    side           — host copies of the slot's side state (ssm/cross/len)
+                     as batch-1 arrays, restored via the insert step.
+    last_tok       — the token the next decode step must feed.
+    """
+
+    req: Request
+    handle: Optional[SwapHandle]
+    n_shared_pages: int
+    n_pages: int
+    side: Dict[str, Any] = field(default_factory=dict)
+    last_tok: int = 0
 
 
 class Engine:
@@ -71,7 +110,8 @@ class Engine:
                  paged: bool = False, page_size: int = 16,
                  n_pool_pages: Optional[int] = None,
                  prefix_cache: bool = False,
-                 chunked_prefill: bool = False, prefill_chunk: int = 32):
+                 chunked_prefill: bool = False, prefill_chunk: int = 32,
+                 preemption: bool = False):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -82,6 +122,9 @@ class Engine:
         self.page_size = page_size
         self.chunked_prefill = chunked_prefill
         self.prefill_chunk = prefill_chunk
+        if preemption and not paged:
+            raise ValueError("preemption requires paged=True")
+        self.preemption = preemption
         if chunked_prefill:
             if not paged:
                 raise ValueError("chunked_prefill requires paged=True")
@@ -106,6 +149,8 @@ class Engine:
             self._prefill = make_prefill_fn(cfg, donate_caches=True)
             self._insert_side = make_paged_insert_fn(cfg)
             self._copy_pages = make_page_copy_fn()
+            self._gather_pages = make_page_gather_fn()
+            self._scatter_pages = make_page_scatter_fn()
             self._slot_pages: List[Optional[np.ndarray]] = [None] * max_batch
         else:
             if prefix_cache:
@@ -137,6 +182,16 @@ class Engine:
         # tokens requested — the prefix-cache savings metric.
         self.prefill_tokens_total = 0
         self.prefill_tokens_computed = 0
+        # page-level preemption state: requests parked off-device, FIFO
+        # resume order; marks record output length at resume for the
+        # starvation guard (no second preemption before progress).
+        self.preempted: List[PreemptedRequest] = []
+        self.preempt_count = 0
+        self.resume_count = 0
+        self.swap_out_pages_total = 0
+        self.swap_in_pages_total = 0
+        self.refault_pages_total = 0      # prefix pages recomputed on resume
+        self._resume_marks: Dict[int, int] = {}
 
     # -- capacity ------------------------------------------------------------
     def free_slots(self) -> List[int]:
@@ -161,14 +216,30 @@ class Engine:
     # -- paged-pool helpers ---------------------------------------------------
     def _alloc_pages(self, n: int) -> np.ndarray:
         """Pool alloc with prefix-cache backpressure: on exhaustion, evict
-        LRU tree retentions until the request fits, then retry."""
+        LRU tree retentions until the request fits, then retry. Raises
+        :class:`PoolExhausted` when even eviction cannot cover it; it
+        never preempts (resume paths use it, and a resume stealing pages
+        from another active slot would be swap ping-pong)."""
         try:
             return self.pool.alloc(n)
-        except RuntimeError:
+        except PoolExhausted:
             if self.prefix_cache is None:
                 raise
             self.prefix_cache.evict(n - self.pool.n_free)
             return self.pool.alloc(n)
+
+    def _alloc_pages_preempting(self, n: int) -> np.ndarray:
+        """Admission-path alloc: evict tree retentions first, then
+        preempt active slots — lowest priority, fewest-pages-lost-first,
+        never the last active slot — until the allocation fits. Raises
+        :class:`PoolExhausted` when no eligible victim remains (deny
+        instead of thrash)."""
+        while True:
+            try:
+                return self._alloc_pages(n)
+            except PoolExhausted:
+                if not self.preemption or not self._preempt_one():
+                    raise
 
     def _side_caches(self):
         return make_caches(self.cfg, 1, self.max_len, dtype=self.cache_dtype,
@@ -186,8 +257,167 @@ class Engine:
     def assert_no_page_leaks(self, extra_holders: Sequence = ()) -> None:
         """Pool leak audit: every used page must be accounted for by an
         active slot, the radix tree, or a caller-supplied holder (e.g. an
-        un-inserted payload), with exact per-page ref counts."""
-        self.pool.assert_balanced([*self.page_holders(), *extra_holders])
+        un-inserted payload), with exact per-page ref counts — and every
+        host-swap entry by a preempted request's handle."""
+        self.pool.assert_balanced(
+            [*self.page_holders(), *extra_holders],
+            swap_handles=[pr.handle for pr in self.preempted
+                          if pr.handle is not None])
+
+    # -- page-level preemption ------------------------------------------------
+    def _preempt_one(self) -> bool:
+        """Preempt one victim to relieve pool pressure. Returns False
+        when nothing is eligible: fewer than two active slots (the last
+        active request is never preempted — preempting it to serve
+        itself or an incoming request is pure thrash), or every
+        candidate is starvation-guarded."""
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if len(active) <= 1:
+            return False
+        cands = []
+        for i in active:
+            r = self.slots[i]
+            pages = self._slot_pages[i]
+            n_private = sum(1 for p in pages
+                            if self.pool.refcount(int(p)) == 1)
+            mark = self._resume_marks.get(r.request_id)
+            cands.append(VictimCandidate(
+                slot=i, pages_lost=n_private, priority=r.priority,
+                made_progress=(mark is None
+                               or len(r.output_tokens) > mark),
+                preempt_count=r.n_preempts))
+        v = pick_preemption_victim(cands)
+        if v is None:
+            return False
+        self.preempt_slot(v.slot)
+        return True
+
+    def preempt_slot(self, slot: int) -> PreemptedRequest:
+        """Evict one active decode slot to make room: tree-shared pages
+        (the leading run with refcount > 1) are unref'd — their KV stays
+        device-resident under the other holders' refs — and the private
+        remainder (CoW copies, generated-token pages) is gathered to the
+        host swap store. The request parks in ``self.preempted`` until
+        ``try_resume`` re-admits it."""
+        req = self.slots[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is not active")
+        pages = self._slot_pages[slot]
+        n_shared = 0
+        if self.prefix_cache is not None:
+            while (n_shared < len(pages)
+                   and self.pool.refcount(int(pages[n_shared])) > 1):
+                n_shared += 1
+        private = pages[n_shared:]
+        handle = None
+        if len(private):
+            data = jax.device_get(self._gather_pages(
+                self.caches["attn"], jnp.asarray(private, jnp.int32)))
+            handle = self.pool.swap_out(private, data)
+            self.swap_out_pages_total += len(private)
+        if n_shared:
+            self.pool.unref(pages[:n_shared])
+
+        def take(x):
+            return np.asarray(x[:, slot:slot + 1])
+
+        side = {"ssm": jax.tree.map(take, self.caches["ssm"]),
+                "cross": (None if self.caches["cross"] is None else
+                          jax.tree.map(take, self.caches["cross"])),
+                "len": np.asarray(self.caches["len"][slot:slot + 1])}
+        pr = PreemptedRequest(req=req, handle=handle,
+                              n_shared_pages=n_shared, n_pages=len(pages),
+                              side=side, last_tok=int(self._last_tok[slot]))
+        self.slots[slot] = None
+        self._slot_pages[slot] = None
+        # unmap the row: the parked slot's lock-step decode writes land
+        # on the trash page, never on re-allocated pages
+        self.caches["pages"] = self.caches["pages"].at[slot].set(0)
+        req.n_preempts += 1
+        self.preempt_count += 1
+        self.preempted.append(pr)
+        return pr
+
+    def try_resume(self) -> int:
+        """Re-admit preempted requests in FIFO order while free slots
+        and pages allow; stops at the first one that does not fit (FIFO
+        keeps resume fair — no overtaking by smaller requests)."""
+        n = 0
+        while self.preempted and self.free_slots():
+            if not self._resume(self.preempted[0], self.free_slots()[0]):
+                break
+            self.preempted.pop(0)
+            n += 1
+        return n
+
+    def _resume(self, pr: PreemptedRequest, slot: int) -> bool:
+        """Re-fault one preempted request into ``slot``: re-ref its
+        shared prefix from the tree (recomputing any pages the tree
+        evicted meanwhile into private copies), swap its private pages
+        back in, and restore side state + block table. Returns False —
+        with every ref unwound and the swap handle untouched — when the
+        pool cannot cover it yet."""
+        page = self.page_size
+        row = np.zeros((self.max_len // page,), np.int32)
+        n_shared = pr.n_shared_pages
+        m = MatchResult()
+        try:
+            resident = 0
+            if n_shared:
+                m = self.prefix_cache.match_and_ref(
+                    pr.req.prompt_tokens, cap=n_shared * page)
+                if m.cow_src is not None:     # full pages only on resume
+                    self.pool.unref([m.cow_src])
+                    m.cow_src = None
+                resident = m.n_full_pages
+                row[:resident] = m.page_ids
+            # reserve EVERYTHING still needed (evicted-prefix re-fault
+            # pages + the swapped private set) in one atomic alloc, so a
+            # failed attempt unwinds before any compute runs or the swap
+            # handle is consumed — no repeated recompute, no double-
+            # counted metrics across retries
+            n_miss = n_shared - resident
+            n_priv = pr.handle.n_pages if pr.handle is not None else 0
+            ids_all = self._alloc_pages(n_miss + n_priv)
+        except PoolExhausted:
+            self.pool.unref(m.page_ids)
+            return False
+        if n_miss:
+            # the tree evicted part of the shared prefix while this
+            # request was parked: re-fault private copies by recomputing
+            # those tokens' KV through the suffix step (prefix_len =
+            # tokens still resident). Without this the block table would
+            # dangle on freed/re-used pages.
+            row[resident:n_shared] = ids_all[:n_miss]
+            pos, end = resident * page, n_shared * page
+            sfx = np.asarray(pr.req.prompt_tokens[pos:end], np.int32)[None]
+            side = self._side_caches()
+            pcaches = {"attn": self.caches["attn"], "ssm": side["ssm"],
+                       "cross": side["cross"], "len": side["len"],
+                       "pages": jnp.asarray(row[None])}
+            _, new = self._prefill_suffix(
+                self.params, jnp.asarray(sfx),
+                jnp.asarray([end], jnp.int32), pcaches,
+                jnp.asarray(pos, jnp.int32), jnp.asarray(pos, jnp.int32))
+            self.caches["attn"] = new["attn"]
+            self.refault_pages_total += n_miss
+        if pr.handle is not None:
+            # hand the reserved pages back so swap_in (the only consumer
+            # of the handle) re-pops exactly them — it cannot fail now
+            self.pool.free(ids_all[n_miss:])
+            ids, data = self.pool.swap_in(pr.handle)
+            row[n_shared:n_shared + len(ids)] = ids
+            self.caches["attn"] = self._scatter_pages(
+                self.caches["attn"], data, jnp.asarray(ids))
+            self.swap_in_pages_total += len(ids)
+        self.caches = self._insert_side(pr.side, self.caches,
+                                        jnp.asarray(row), slot)
+        self._slot_pages[slot] = np.asarray(row[:pr.n_pages], np.int32)
+        self.slots[slot] = pr.req
+        self._last_tok[slot] = pr.last_tok
+        self._resume_marks[pr.req.request_id] = len(pr.req.output_tokens)
+        self.resume_count += 1
+        return True
 
     # -- stages --------------------------------------------------------------
     def prefill_request(self, req: Request, mm_embeds=None,
@@ -387,7 +617,7 @@ class Engine:
             ids = payload.page_ids               # zero-copy handoff
             self.kv_insert_bytes = 0
         else:
-            ids = self._alloc_pages(payload.n_pages)
+            ids = self._alloc_pages_preempting(payload.n_pages)
             self.caches["attn"] = self._copy_pages(
                 payload.source.caches["attn"], self.caches["attn"],
                 jnp.asarray(payload.page_ids), jnp.asarray(ids))
@@ -411,19 +641,32 @@ class Engine:
         The allocation is all-or-nothing: every slot's demand is summed
         and allocated in one pool call BEFORE any bookkeeping mutates,
         so a pool-exhaustion error leaves host state and device block
-        tables consistent (the caller can drain slots and retry)."""
+        tables consistent (the caller can drain slots and retry).
+
+        With ``preemption=True``, exhaustion preempts a victim (fewest
+        private pages lost, never the last active slot) and re-derives
+        the demand — a preempted slot both frees pages and drops out of
+        the demand list — repeating until the growth fits or no victim
+        remains (then the typed :class:`PoolExhausted` propagates,
+        which is the pre-preemption kill behavior)."""
         width = self.max_len // self.page_size
-        demand: List[Tuple[int, int, int]] = []    # (slot, have, n_new)
-        for i, req in enumerate(self.slots):
-            if req is None:
-                continue
-            need = min(int(lens[i]) // self.page_size + 1, width)
-            have = len(self._slot_pages[i])
-            if need > have:
-                demand.append((i, have, need - have))
-        if not demand:
-            return
-        ids = self._alloc_pages(sum(n for _, _, n in demand))  # atomic
+        while True:
+            demand: List[Tuple[int, int, int]] = []    # (slot, have, n_new)
+            for i, req in enumerate(self.slots):
+                if req is None:
+                    continue
+                need = min(int(lens[i]) // self.page_size + 1, width)
+                have = len(self._slot_pages[i])
+                if need > have:
+                    demand.append((i, have, need - have))
+            if not demand:
+                return
+            try:
+                ids = self._alloc_pages(sum(n for _, _, n in demand))
+                break                                  # atomic
+            except PoolExhausted:
+                if not self.preemption or not self._preempt_one():
+                    raise
         updates: List[Tuple[int, int, int]] = []
         off = 0
         for i, have, n in demand:
@@ -445,7 +688,11 @@ class Engine:
 
     def decode_step(self) -> List[Tuple[Request, int, bool]]:
         """One lock-step decode over all slots. Returns (req, token, done)
-        for every ACTIVE slot (inactive slots compute but are ignored)."""
+        for every ACTIVE slot (inactive slots compute but are ignored).
+        Preempted requests are re-admitted first (FIFO, page-permitting)
+        so a resumed slot decodes in this very step."""
+        if self.paged and self.preempted:
+            self.try_resume()
         # single device->host sync per step (not per slot)
         lens = np.asarray(self.caches["len"])
         if self.paged:
@@ -466,6 +713,7 @@ class Engine:
                     int(lens[i]) + 1 >= self.max_len - 1)
             if done:
                 self.slots[i] = None
+                self._resume_marks.pop(req.request_id, None)
                 if self.paged:
                     self._release_slot(i)
             out.append((req, t, done))

@@ -23,18 +23,68 @@ module is the HOST-side bookkeeping around it:
   pages may be shared (prefix-cache hits): the payload holds ONE ref per
   page, released on insert-into-another-engine or ``release_payload``.
 
+* :class:`SwapHandle` — the preemption unit. ``swap_out`` moves a set of
+  pages' *contents* to a host-side (``np``) backing store and returns the
+  pages to the free list; the handle is the ticket that gets them back.
+
+  Swap-handle lifecycle: a handle is born in ``swap_out`` (the caller —
+  the engine preempting a decode slot — gathers the pages' KV off the
+  device and hands it over together with its page refs). From then on
+  exactly one of two things consumes it: ``swap_in`` (re-fault: allocates
+  the same number of fresh device pages, pops the host copy and returns
+  both so the caller can scatter the KV back — on ``PoolExhausted`` the
+  handle stays valid and retryable) or ``swap_free`` (the preempted
+  request was abandoned; the host copy is dropped). A handle that is
+  never consumed is a leak: ``assert_balanced(swap_handles=...)`` checks
+  the outstanding handle set against the preempted requests the caller
+  knows about, exactly like device pages are checked against holders.
+
 Leak auditing: ``assert_balanced`` cross-checks the allocator against
-the holders the caller believes exist (slots, radix-tree retentions) —
-engine/cluster tests call it after draining.
+the holders the caller believes exist (slots, radix-tree retentions,
+swap handles of preempted requests) — engine/cluster tests call it
+after draining.
 """
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterable, List, Sequence
+from typing import Any, Dict, Iterable, List, Sequence, Tuple
 
 import numpy as np
 
 TRASH_PAGE = 0
+
+
+class PoolExhausted(RuntimeError):
+    """Typed pool-exhaustion error: ``requested`` pages were asked for
+    with only ``n_free`` free. Subclasses RuntimeError so pre-existing
+    callers keep working; new callers (the preemption trigger, tests)
+    can catch/assert on the type instead of string-matching. Note that
+    ``n_free`` counts pages on the free list — a pool can be "full"
+    while most pages are merely retained by the prefix tree or shared
+    by other requests (fragmented-by-refs), which is exactly the state
+    preemption and tree eviction reclaim from."""
+
+    def __init__(self, requested: int, n_free: int, n_usable: int):
+        self.requested = int(requested)
+        self.n_free = int(n_free)
+        self.n_usable = int(n_usable)
+        super().__init__(
+            f"KV page pool exhausted: requested {requested} pages, "
+            f"{n_free}/{n_usable} free")
+
+
+@dataclass(frozen=True)
+class SwapHandle:
+    """Ticket for pages swapped out to the pool's host backing store.
+
+    ``handle_id`` indexes the pool's store; ``n_pages`` is what
+    ``swap_in`` will re-allocate. The handle carries no KV itself — the
+    host copy lives in the pool — so it is safe to stash on a preempted
+    request and to audit by identity."""
+
+    handle_id: int
+    n_pages: int
 
 
 def pages_for(n_tokens: int, page_size: int) -> int:
@@ -62,6 +112,13 @@ class PagePool:
         # contents are most likely still resident in cache hierarchies).
         self._free: List[int] = list(range(n_pages - 1, 0, -1))
         self._refs: Dict[int, int] = {}
+        # host-side swap space: handle_id -> (n_pages, host KV pytree).
+        # Contents parked here have no device pages; SwapHandle is the
+        # only way back in (see the module docstring for the lifecycle).
+        self._swap: Dict[int, Tuple[int, Any]] = {}
+        self._handle_seq = itertools.count(1)
+        self.swapped_out_pages_total = 0
+        self.swapped_in_pages_total = 0
         # high-water mark of used pages (benchmarks: chunked-prefill
         # memory accounting)
         self.peak_used = 0
@@ -81,14 +138,13 @@ class PagePool:
         return self._refs.get(int(page), 0)
 
     def alloc(self, n: int) -> np.ndarray:
-        """Pop ``n`` physical page ids at refcount 1; raises RuntimeError
-        when exhausted."""
+        """Pop ``n`` physical page ids at refcount 1; raises
+        :class:`PoolExhausted` (a RuntimeError) when the free list is
+        shorter than ``n``."""
         if n <= 0:
             return np.zeros((0,), np.int32)
         if n > len(self._free):
-            raise RuntimeError(
-                f"KV page pool exhausted: requested {n} pages, "
-                f"{len(self._free)}/{self.n_pages - 1} free")
+            raise PoolExhausted(n, len(self._free), self.n_pages - 1)
         out = self._free[-n:][::-1]
         del self._free[-n:]
         for p in out:
@@ -122,12 +178,64 @@ class PagePool:
 
     unref = free
 
-    def assert_balanced(self, holders: Iterable[Sequence[int]] = ()) -> None:
+    # -- host swap space (page-level preemption) ------------------------------
+
+    @property
+    def n_swapped_pages(self) -> int:
+        """Pages whose contents currently live in the host backing store."""
+        return sum(n for n, _ in self._swap.values())
+
+    def swap_out(self, pages: Sequence[int], data: Any = None) -> SwapHandle:
+        """Park ``pages``' contents in the host backing store.
+
+        ``data`` is the gathered page KV (any host pytree — the caller
+        owns the device->host copy; bookkeeping-only users may pass
+        None). Drops ONE ref per page — the caller's holdership moves
+        from the device pages to the returned handle — so a page shared
+        with other holders (prefix tree, other slots) survives on
+        device while this caller's private pages return to the free
+        list. See the module docstring for the handle lifecycle."""
+        pages = [int(p) for p in pages]
+        if not pages:
+            raise ValueError("swap_out of an empty page set")
+        h = SwapHandle(next(self._handle_seq), len(pages))
+        self.free(pages)               # validates refs; raises before store
+        self._swap[h.handle_id] = (len(pages), data)
+        self.swapped_out_pages_total += len(pages)
+        return h
+
+    def swap_in(self, handle: SwapHandle) -> Tuple[np.ndarray, Any]:
+        """Re-fault a swapped set: allocate ``handle.n_pages`` fresh
+        device pages (refcount 1) and pop the host copy. Returns
+        ``(new_page_ids, data)`` for the caller to scatter back. On
+        :class:`PoolExhausted` the handle remains valid and retryable;
+        on success it is consumed and must not be reused."""
+        if handle.handle_id not in self._swap:
+            raise ValueError(f"unknown or already-consumed swap "
+                             f"handle {handle.handle_id}")
+        ids = self.alloc(handle.n_pages)       # may raise: handle intact
+        _, data = self._swap.pop(handle.handle_id)
+        self.swapped_in_pages_total += handle.n_pages
+        return ids, data
+
+    def swap_free(self, handle: SwapHandle) -> None:
+        """Drop a swapped set without re-faulting it (the preempted
+        request was abandoned). Idempotence is NOT provided — freeing a
+        consumed handle raises, matching the double-free check."""
+        if handle.handle_id not in self._swap:
+            raise ValueError(f"double free of swap handle "
+                             f"{handle.handle_id}")
+        del self._swap[handle.handle_id]
+
+    def assert_balanced(self, holders: Iterable[Sequence[int]] = (),
+                        swap_handles: Iterable[SwapHandle] = ()) -> None:
         """Leak assertion: the allocator's view must match the holders the
         caller knows about (each element of ``holders`` is one holder's
         page-id list — a slot's block-table row, a payload, the radix
-        tree's retained pages). Raises AssertionError on any leaked page,
-        ref-count mismatch, or free-list corruption."""
+        tree's retained pages), and the host swap store must match the
+        ``swap_handles`` the caller knows about (the preempted requests'
+        tickets). Raises AssertionError on any leaked page, ref-count
+        mismatch, free-list corruption, or leaked/dangling swap entry."""
         expect: Dict[int, int] = {}
         for h in holders:
             for p in h:
@@ -147,6 +255,23 @@ class PagePool:
             got = self._refs.get(p, 0)
             assert got == want, (
                 f"page {p}: {got} refs but {want} holders")
+        expect_swap = {}
+        for h in swap_handles:
+            assert h.handle_id not in expect_swap, \
+                f"swap handle {h.handle_id} claimed twice"
+            expect_swap[h.handle_id] = h.n_pages
+        got_swap = {hid: n for hid, (n, _) in self._swap.items()}
+        leaked_swap = {h: n for h, n in got_swap.items()
+                       if h not in expect_swap}
+        assert not leaked_swap, (
+            f"leaked swap entries (no preempted holder): {leaked_swap}")
+        for hid, want in expect_swap.items():
+            assert hid in got_swap, (
+                f"dangling swap handle {hid}: holder exists but the "
+                f"host store has no entry (consumed or never created)")
+            assert got_swap[hid] == want, (
+                f"swap handle {hid}: store holds {got_swap[hid]} pages "
+                f"but the handle claims {want}")
 
 
 @dataclass

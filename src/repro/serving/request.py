@@ -17,6 +17,12 @@ class Request:
     mm_payload: Optional[bytes] = None
     mm_tokens: int = 0                  # vision/audio token count
     eos_token: int = -1                 # -1: never stop early
+    # preemption: higher priority is preempted later; killed marks a
+    # request dropped by the no-preemption OOM baseline; n_preempts
+    # counts page-level preemptions (starvation-guard + metrics)
+    priority: int = 0
+    killed: bool = False
+    n_preempts: int = 0
     request_id: int = field(default_factory=lambda: next(_ids))
 
     # lifecycle timestamps (simulation or wall-clock), seconds

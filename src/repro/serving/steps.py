@@ -126,6 +126,35 @@ def make_page_copy_fn():
     return copy_fn
 
 
+def make_page_gather_fn():
+    """Pull a set of physical pages out of the pool: the device side of
+    preemption swap-out. Returns the gathered page KV (all layers) for
+    the caller to move to the host backing store."""
+
+    @jax.jit
+    def gather_fn(attn, ids):
+        def g(pool):
+            return pool[:, ids]
+
+        return jax.tree.map(g, attn)
+
+    return gather_fn
+
+
+def make_page_scatter_fn():
+    """Write previously-swapped page KV back into freshly-allocated pool
+    pages: the device side of preemption swap-in (re-fault)."""
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def scatter_fn(attn, data, ids):
+        def s(pool, d):
+            return pool.at[:, ids].set(d.astype(pool.dtype))
+
+        return jax.tree.map(s, attn, data)
+
+    return scatter_fn
+
+
 def make_pool_page_copy_fn():
     """Same-pool page duplication: the copy-on-write step of the prefix
     cache. Copies each ``src_ids[i]`` page onto ``dst_ids[i]`` within one

@@ -1,9 +1,35 @@
+import os
+
 import jax
 import pytest
 
 # Tests run on the single CPU device (the dry-run sets its own
 # XLA_FLAGS in-process; see src/repro/launch/dryrun.py).
 jax.config.update("jax_platform_name", "cpu")
+
+# Hypothesis profiles: CI runs with HYPOTHESIS_PROFILE=ci — deadlines
+# stay off (jit compilation makes first examples arbitrarily slow) and
+# the property suites scale their example budgets down via
+# ``hyp_max_examples``. Local runs keep the full budgets.
+HYPOTHESIS_PROFILE = os.environ.get("HYPOTHESIS_PROFILE", "dev")
+
+try:
+    from hypothesis import settings
+
+    settings.register_profile("ci", deadline=None, print_blob=True)
+    settings.register_profile("dev", deadline=None)
+    settings.load_profile(HYPOTHESIS_PROFILE
+                          if HYPOTHESIS_PROFILE in ("ci", "dev")
+                          else "dev")
+except ImportError:                       # hypothesis is optional (tier-1
+    pass                                  # suites importorskip it)
+
+
+def hyp_max_examples(n: int) -> int:
+    """Per-test example budget honoring the CI profile: a quarter of the
+    local budget (floor 5) keeps the smoke jobs inside their timeout
+    while the nightly/dev runs explore the full space."""
+    return max(5, n // 4) if HYPOTHESIS_PROFILE == "ci" else n
 
 
 @pytest.fixture(scope="session")

@@ -1,4 +1,6 @@
-"""Edge cases: engine capacity, enc-dec serving, simulator breakdown."""
+"""Edge cases: engine capacity, enc-dec serving, simulator breakdown,
+preemption corner cases (disabled => old kill behavior; sole-victim
+denial; resume across prefix-cache eviction)."""
 import jax
 import jax.numpy as jnp
 import pytest
@@ -8,6 +10,7 @@ from repro.core.cluster import EPDCluster
 from repro.core.simulator import SHAREGPT_4O, simulate
 from repro.models.model import init_params
 from repro.serving.engine import Engine
+from repro.serving.kv_pool import PoolExhausted
 from repro.serving.request import Request
 
 
@@ -49,6 +52,104 @@ def test_engine_rejects_overlong_prompt():
     eng = Engine(cfg, params, max_batch=1, max_len=16)
     with pytest.raises(ValueError, match="exceeds"):
         eng.prefill_request(Request(prompt_tokens=list(range(40))))
+
+
+def test_preemption_disabled_preserves_kill_behavior():
+    """Without preemption=True nothing is preempted: growth exhaustion
+    raises the typed PoolExhausted exactly like before, host/device
+    bookkeeping stays consistent, and no request is parked."""
+    cfg = get_config("smollm-135m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_batch=2, max_len=32, paged=True,
+                 page_size=8, n_pool_pages=5)      # 4 usable pages
+    reqs = [Request(prompt_tokens=list(range(2, 18)), max_new_tokens=30)
+            for _ in range(2)]
+    for r in reqs:
+        f, p = eng.prefill_request(r)
+        eng.insert(r, p, f)
+    with pytest.raises(PoolExhausted):
+        while eng.n_active:
+            eng.decode_step()
+    assert eng.preempt_count == 0
+    assert not eng.preempted
+    assert all(r.n_preempts == 0 for r in reqs)
+    # accounting intact: host page lists agree with the allocator
+    assert sum(len(p) for p in eng._slot_pages if p is not None) \
+        == eng.pool.n_used
+
+
+def test_sole_active_victim_denies_instead_of_thrashing():
+    """When the only possible victim is the only active request —
+    growth for itself, or admission of a newcomer — the engine denies
+    the allocation (typed error) instead of swap-thrashing it."""
+    cfg = get_config("smollm-135m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_batch=2, max_len=32, paged=True,
+                 page_size=4, preemption=True, n_pool_pages=4)  # 3 usable
+    r = Request(prompt_tokens=list(range(2, 10)), max_new_tokens=20)
+    f, p = eng.prefill_request(r)
+    eng.insert(r, p, f)
+    # its own growth cannot evict it
+    with pytest.raises(PoolExhausted):
+        while eng.n_active:
+            eng.decode_step()
+    assert eng.preempt_count == 0
+    assert any(s is r for s in eng.slots)          # victim untouched
+    # admission of a second request cannot evict the last active either
+    src = Engine(cfg, params, max_batch=1, max_len=32, paged=True,
+                 page_size=4)
+    r2 = Request(prompt_tokens=list(range(40, 48)), max_new_tokens=2)
+    f2, p2 = src.prefill_request(r2)
+    with pytest.raises(PoolExhausted):
+        eng.insert(r2, p2, f2)
+    assert eng.preempt_count == 0
+    assert any(s is r for s in eng.slots)
+    src.release_payload(p2)
+    src.assert_no_page_leaks()
+    eng.assert_no_page_leaks()
+
+
+def test_resume_after_prefix_eviction_refaults_private_copies():
+    """A preempted request whose tree-shared prefix is evicted while
+    parked must recompute those pages into private copies on resume —
+    not dangle on freed ids — and still match the uninterrupted output."""
+    cfg = get_config("smollm-135m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompt = list(range(2, 20))                    # 18 tokens
+    base = Engine(cfg, params, max_batch=2, max_len=64, paged=True,
+                  page_size=8)
+    r0 = Request(prompt_tokens=list(prompt), max_new_tokens=6)
+    f, p = base.prefill_request(r0)
+    base.insert(r0, p, f)
+    while base.n_active:
+        base.decode_step()
+
+    eng = Engine(cfg, params, max_batch=2, max_len=64, paged=True,
+                 page_size=8, prefix_cache=True, preemption=True,
+                 n_pool_pages=64)
+    seed = Request(prompt_tokens=list(prompt), max_new_tokens=2)
+    f, p = eng.prefill_request(seed)
+    eng.insert(seed, p, f)
+    while eng.n_active:
+        eng.decode_step()
+    r = Request(prompt_tokens=list(prompt), max_new_tokens=6)
+    f, p = eng.prefill_request(r)                  # hits the cached prefix
+    eng.insert(r, p, f)
+    eng.decode_step()
+    pr = eng.preempt_slot(next(i for i, s in enumerate(eng.slots)
+                               if s is r))
+    assert pr.n_shared_pages > 0                   # prefix stayed in tree
+    evicted = eng.prefix_cache.evict(eng.pool.n_pages)
+    assert evicted >= pr.n_shared_pages            # ...until we drop it
+    assert not eng.prefix_cache.retained_pages()
+    steps = 0
+    while any(s is r for s in eng.slots) or eng.preempted:
+        eng.decode_step()
+        steps += 1
+        assert steps < 100
+    assert r.output_tokens == r0.output_tokens
+    assert eng.refault_pages_total >= pr.n_shared_pages
+    eng.assert_no_page_leaks()
 
 
 def test_simulator_stage_breakdown_consistency():

@@ -1,35 +1,42 @@
-"""Hypothesis property tests for the radix-tree prefix cache and the
-chunked paged-prefill engine: ref-count conservation, branch integrity,
-and match/page agreement under arbitrary interleavings of (chunked)
-prefills, inserts, decode steps, early-EOS releases, and evictions."""
+"""Hypothesis property tests for the radix-tree prefix cache, the page
+pool's host swap space, and the (chunked, preemptible) paged engine:
+ref-count conservation, branch integrity, swap-handle balance, and
+match/page agreement under arbitrary interleavings of (chunked)
+prefills, inserts, decode steps, early-EOS releases, evictions, and
+preempt/resume cycles. Honors HYPOTHESIS_PROFILE=ci (conftest)."""
 import pytest
 
 hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 from hypothesis import given, settings
 
-from repro.serving.kv_pool import PagePool
+from conftest import hyp_max_examples
+from repro.serving.kv_pool import PagePool, PoolExhausted
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import Request
 
 
 # ---------------------------------------------------------------------------
-# hypothesis: ref-count + branch-integrity invariants
+# hypothesis: ref-count + branch-integrity + swap-handle invariants
 # ---------------------------------------------------------------------------
 
 
-@settings(max_examples=60, deadline=None)
-@given(st.lists(st.tuples(st.sampled_from(["insert", "release", "evict"]),
+@settings(max_examples=hyp_max_examples(60), deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["insert", "release", "evict",
+                                           "preempt", "resume"]),
                           st.integers(0, 7), st.integers(1, 20)),
                 min_size=1, max_size=40),
        st.integers(2, 8))
 def test_tree_refcount_invariant(ops, page):
-    """Total refs per page == retaining requests + tree retentions, under
-    arbitrary interleavings of insert / release / evict; inserted
-    sequences stay matchable unless evicted; unrelated branches survive."""
+    """Total refs per page == retaining requests + tree retentions, and
+    the host swap store == outstanding preempted handles, under
+    arbitrary interleavings of insert / release / evict / preempt
+    (swap_out) / resume (swap_in); inserted sequences stay matchable
+    unless evicted; unrelated branches survive."""
     pool = PagePool(257, page_size=page)
     cache = PrefixCache(page, pool)
     live = {}                                     # rid -> (tokens, ids)
+    swapped = {}                                  # rid -> (tokens, handle)
     rid = 0
     for op, fam, ln in ops:
         if op == "insert" and pool.n_free >= pool.pages_for(ln):
@@ -45,9 +52,30 @@ def test_tree_refcount_invariant(ops, page):
             pool.free(ids)
         elif op == "evict":
             cache.evict(ln)
-        # invariant: allocator state == request holders + tree retentions
+        elif op == "preempt" and live:
+            # the request's holdership moves to a swap handle: shared
+            # pages survive on device under the tree's refs, private
+            # ones return to the free list — either way the audit must
+            # keep balancing
+            k = sorted(live)[fam % len(live)]
+            tokens, ids = live.pop(k)
+            swapped[k] = (tokens, pool.swap_out(ids, data=len(ids)))
+        elif op == "resume" and swapped:
+            k = sorted(swapped)[fam % len(swapped)]
+            tokens, h = swapped[k]
+            try:
+                ids, data = pool.swap_in(h)
+            except PoolExhausted:
+                pass                     # handle stays valid and audited
+            else:
+                assert data == len(ids) == h.n_pages
+                del swapped[k]
+                live[k] = (tokens, ids)
+        # invariant: allocator state == request holders + tree
+        # retentions; swap store == outstanding handles
         pool.assert_balanced(
-            [ids for _, ids in live.values()] + [cache.retained_pages()])
+            [ids for _, ids in live.values()] + [cache.retained_pages()],
+            swap_handles=[h for _, h in swapped.values()])
     # match structure agrees with the refs it takes: one page per full
     # matched page, a CoW source iff the match ends inside a page (same-
     # family sequences share prefixes, so a match may run past one
@@ -62,7 +90,7 @@ def test_tree_refcount_invariant(ops, page):
             pool.unref([m.cow_src])
 
 
-@settings(max_examples=30, deadline=None)
+@settings(max_examples=hyp_max_examples(30), deadline=None)
 @given(st.lists(st.lists(st.integers(0, 3), min_size=1, max_size=24),
                 min_size=2, max_size=8))
 def test_tree_match_is_true_prefix(seqs):
@@ -88,7 +116,73 @@ def test_tree_match_is_true_prefix(seqs):
 
 
 # ---------------------------------------------------------------------------
-# hypothesis: chunked engine — refcount conservation with REAL compute
+# deterministic regression: the double-preempt starvation guard
+# ---------------------------------------------------------------------------
+
+
+def test_starvation_guard_pick_semantics():
+    from repro.core.scheduler import (VictimCandidate,
+                                      pick_preemption_victim)
+    fresh = VictimCandidate(slot=0, pages_lost=9)
+    resumed_stuck = VictimCandidate(slot=1, pages_lost=1,
+                                    made_progress=False, preempt_count=1)
+    resumed_ok = VictimCandidate(slot=2, pages_lost=5,
+                                 made_progress=True, preempt_count=3)
+    # the cheapest victim is guarded: pick the cheapest ELIGIBLE one
+    v = pick_preemption_victim([fresh, resumed_stuck, resumed_ok])
+    assert v.slot == 2
+    # priority dominates page cost
+    hi = VictimCandidate(slot=3, pages_lost=1, priority=1)
+    assert pick_preemption_victim([fresh, hi]).slot == 0
+    # everyone guarded: deny (None), never thrash
+    assert pick_preemption_victim([resumed_stuck]) is None
+    # a never-preempted request that hasn't "progressed" is still fair
+    # game (made_progress only gates RE-preemption)
+    new_stale = VictimCandidate(slot=4, pages_lost=2,
+                                made_progress=False, preempt_count=0)
+    assert pick_preemption_victim([new_stale]).slot == 4
+
+
+def test_starvation_guard_engine_regression(monkeypatch):
+    """A request resumed this step (no token since) is not preempted a
+    second time: the engine must pick the other active slot, and deny
+    when the resumed one is the only candidate."""
+    import jax
+    from repro.configs import get_config
+    from repro.models.model import init_params
+    from repro.serving.engine import Engine
+    cfg = get_config("smollm-135m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_batch=2, max_len=32, paged=True,
+                 page_size=4, preemption=True, n_pool_pages=32)
+    a = Request(prompt_tokens=list(range(2, 10)), max_new_tokens=12)
+    b = Request(prompt_tokens=list(range(20, 28)), max_new_tokens=12)
+    for r in (a, b):
+        f, p = eng.prefill_request(r)
+        eng.insert(r, p, f)
+    slot_a = next(i for i, s in enumerate(eng.slots) if s is a)
+    eng.preempt_slot(slot_a)
+    assert eng.try_resume() == 1                   # a is back, no token yet
+    assert a.n_preempts == 1
+    assert eng._preempt_one()                      # guard: must pick b
+    assert any(s is a for s in eng.slots)
+    assert b.n_preempts == 1
+    assert eng.try_resume() == 1                   # b back, also no token
+    # both active, both resumed-without-progress: deny outright
+    assert not eng._preempt_one()
+    assert eng.preempt_count == 2
+    eng.decode_step()                              # one token of progress
+    assert eng._preempt_one()                      # guard lifts
+    for pr in list(eng.preempted):
+        if pr.handle is not None:
+            eng.pool.swap_free(pr.handle)
+    eng.preempted.clear()
+    eng.assert_no_page_leaks()
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: chunked+preemptible engine — refcount conservation with
+# REAL compute
 # ---------------------------------------------------------------------------
 
 # one engine shared across examples (jit caches amortized); every example
@@ -106,11 +200,12 @@ def _chunked_engine():
         cfg = get_config("smollm-135m").reduced()
         params = init_params(cfg, jax.random.PRNGKey(0))
         # deliberately tight pool (19 usable pages) so interleavings hit
-        # exhaustion, eviction-under-pressure, and the chunk-loop unwind
+        # exhaustion, eviction-under-pressure, the chunk-loop unwind,
+        # and organic decode-growth preemption
         _ENGINE = Engine(cfg, params, max_batch=2, max_len=32, paged=True,
                          page_size=4, prefix_cache=True,
                          chunked_prefill=True, prefill_chunk=8,
-                         n_pool_pages=20)
+                         preemption=True, n_pool_pages=20)
     return _ENGINE
 
 
@@ -119,21 +214,29 @@ def _reset(eng):
         if r is not None:
             eng.slots[i] = None
             eng._release_slot(i)
+    for pr in eng.preempted:
+        if pr.handle is not None:
+            eng.pool.swap_free(pr.handle)
+    eng.preempted.clear()
+    eng._resume_marks.clear()
     eng.prefix_cache.evict(eng.pool.n_pages)
     eng.prefix_cache = PrefixCache(eng.page_size, eng.pool)
     assert eng.pool.n_used == 0, "reset must drain the pool"
+    assert eng.pool.n_swapped_pages == 0, "reset must drain the swap"
 
 
-@settings(max_examples=25, deadline=None)
+@settings(max_examples=hyp_max_examples(25), deadline=None)
 @given(st.lists(st.tuples(
     st.sampled_from(["prefill", "insert", "decode", "eos", "release",
-                     "evict"]),
+                     "evict", "preempt", "resume"]),
     st.integers(0, 3), st.integers(1, 16)), min_size=1, max_size=14))
 def test_chunked_engine_refcount_conservation(ops):
     """Pool accounting stays exact under arbitrary interleavings of
     CHUNKED prefills (family-shared prefixes: cache hits, CoW), decode
-    steps (page growth), early-EOS slot releases, payload releases, and
-    prefix-cache evictions — including pool-exhaustion unwinds."""
+    steps (page growth, which may organically preempt), early-EOS slot
+    releases, payload releases, prefix-cache evictions, and explicit
+    preempt/resume cycles — including pool-exhaustion unwinds. The
+    audit covers device pages AND outstanding swap handles."""
     eng = _chunked_engine()
     _reset(eng)
     pending = []                            # prefilled, not yet inserted
@@ -169,11 +272,20 @@ def test_chunked_engine_refcount_conservation(ops):
             eng.release_payload(p)
         elif op == "evict":
             eng.prefix_cache.evict(ln)
-        # invariant: allocator == slots + tree + un-inserted payloads
+        elif op == "preempt":
+            active = [i for i, r in enumerate(eng.slots) if r is not None]
+            if active:
+                eng.preempt_slot(active[fam % len(active)])
+        elif op == "resume":
+            eng.try_resume()
+        # invariant: allocator == slots + tree + un-inserted payloads;
+        # swap store == parked requests' handles
         eng.assert_no_page_leaks(
             extra_holders=[p.page_ids for _, _, p in pending])
     for _, _, p in pending:
         eng.release_payload(p)
+    for pr in eng.preempted:
+        if pr.handle is not None:
+            eng.pool.swap_free(pr.handle)
+    eng.preempted.clear()
     eng.assert_no_page_leaks()
-
-
