@@ -1,0 +1,143 @@
+"""Fault-injection chaos benchmark: recovery vs recovery-off.
+
+Two halves, both seeded and deterministic:
+
+1. REAL cluster: a 2-decode-instance FT cluster under a seeded fault
+   plan (transfer wire loss + one armed mid-run decode-instance crash)
+   must complete 100% of requests with greedy outputs BIT-IDENTICAL to
+   the zero-fault run (crash victims re-route to the surviving
+   instance; the re-prefill rides the prefix cache). The same plan
+   with recovery disabled loses requests — surfaced, never silent.
+
+2. Simulator sweep: 1% / 5% per-group transfer loss on the EPD
+   simulator. With recovery, every request completes and the p99 TTFT
+   inflation stays bounded (retry time is charged through the
+   CostModel into latency accounting); recovery-off loses requests.
+
+Emits a BENCH_faults.json snapshot next to the repo root so the
+fault-tolerance trajectory is recorded per PR.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import List
+
+# p99 TTFT with recovery may inflate by at most this factor over the
+# zero-fault run at the swept loss rates (retries cost link time only)
+MAX_P99_TTFT_INFLATION = 1.5
+
+
+def bench_faults() -> List[str]:
+    import jax
+    from repro.configs import get_config
+    from repro.core.cluster import EPDCluster
+    from repro.core.faults import (SITE_DECODE_CRASH, SITE_TRANSFER_WIRE,
+                                   ArmedFault, FaultPlan)
+    from repro.core.simulator import SHAREGPT_4O, simulate
+    from repro.models.model import init_params
+    from repro.serving.request import Request
+
+    rows = ["faults,value,derived"]
+    snap = {"config": {"seed": 7, "crash_site": "decode.crash",
+                       "wire_rates": [0.01, 0.05]},
+            "cluster": {}, "sweep": []}
+
+    # ---- REAL cluster: crash + wire faults, bit-identical recovery ----
+    cfg = get_config("smollm-135m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    def reqs():
+        return [Request(prompt_tokens=list(range(3 + i, 20 + i)),
+                        max_new_tokens=8) for i in range(4)]
+
+    def run(faults=None, recovery=True):
+        cl = EPDCluster(cfg, params, max_batch=2, max_len=64, paged=True,
+                        page_size=8, prefix_cache=True, n_decode=2,
+                        faults=faults, recovery=recovery)
+        rs = reqs()
+        for r in rs:
+            cl.submit(r)
+        done = cl.run_until_done()
+        return cl, rs, done
+
+    _, ref, _ = run()                       # zero-fault reference
+    plan = FaultPlan(seed=7, rates={SITE_TRANSFER_WIRE: 0.05},
+                     armed=[ArmedFault(SITE_DECODE_CRASH, key=(0, 3))])
+    ft, got, done = run(faults=plan)
+    assert not ft.report.lost, "FT cluster must lose nothing"
+    assert len(done) == len(ref), "FT cluster must complete 100%"
+    assert ft.report.instance_crashes == 1
+    assert ft.report.reroutes >= 1, "crash victims must re-route"
+    for a, b in zip(ref, got):
+        assert a.output_tokens == b.output_tokens, \
+            "recovery must keep greedy outputs bit-identical"
+    for i in ft.live_decode_indices():
+        ft.decode_engines[i].assert_no_page_leaks()
+
+    off, _, off_done = run(faults=plan, recovery=False)
+    assert off.report.lost, "recovery-off baseline must lose requests"
+    assert len(off_done) + len(off.report.lost) == len(ref)
+
+    snap["cluster"] = {
+        "n_requests": len(ref), "crashes": ft.report.instance_crashes,
+        "reroutes": ft.report.reroutes,
+        "transfer_retries": ft.report.transfer_retries,
+        "retry_time_ms": round(ft.report.retry_time_total * 1e3, 3),
+        "bit_identical": True, "ft_lost": 0,
+        "recovery_off_lost": len(off.report.lost),
+    }
+    rows.append(
+        f"cluster_crash_reroute,bit_identical,"
+        f"{ft.report.instance_crashes}_crash_{ft.report.reroutes}_"
+        f"reroutes_0_lost_vs_{len(off.report.lost)}_lost_off")
+
+    # ---- simulator: transfer-loss sweep with charged retry time ----
+    model = get_config("openpangu-7b-vl")
+    ds = dataclasses.replace(SHAREGPT_4O, mm_fraction=0.25,
+                             output_tokens=64)
+    kw = dict(rate=24.0, n_requests=40, seed=3, kv_page_tokens=16)
+    base = simulate(model, "E-P-D", ds, **kw)
+    for rate in (0.01, 0.05):
+        fp = FaultPlan(seed=7, rates={SITE_TRANSFER_WIRE: rate})
+        ft = simulate(model, "E-P-D", ds, faults=fp, **kw)
+        off = simulate(model, "E-P-D", ds, faults=fp,
+                       fault_recovery=False, **kw)
+        assert ft.lost_requests == 0, \
+            f"recovery must lose nothing at {rate:.0%}"
+        assert ft.completed_requests == kw["n_requests"]
+        assert ft.transfer_retries > 0, "the sweep must exercise retries"
+        infl = ft.p99_ttft_ms / base.p99_ttft_ms
+        assert infl <= MAX_P99_TTFT_INFLATION, \
+            f"p99 TTFT inflated {infl:.2f}x at {rate:.0%} loss"
+        assert off.lost_requests > 0, \
+            f"recovery-off must lose requests at {rate:.0%}"
+        snap["sweep"].append({
+            "wire_loss_rate": rate,
+            "base_p99_ttft_ms": round(base.p99_ttft_ms, 2),
+            "ft_p99_ttft_ms": round(ft.p99_ttft_ms, 2),
+            "p99_ttft_inflation": round(infl, 3),
+            "ft_transfer_retries": ft.transfer_retries,
+            "ft_retry_time_ms": round(ft.retry_time_ms, 2),
+            "ft_lost": ft.lost_requests,
+            "off_lost": off.lost_requests,
+        })
+        rows.append(
+            f"sim_wire_loss_{int(rate * 100)}pct,"
+            f"0_lost_p99ttft_x{infl:.2f},"
+            f"{ft.transfer_retries}_retries_"
+            f"{ft.retry_time_ms:.1f}ms_charged_vs_"
+            f"{off.lost_requests}_lost_off")
+
+    out = os.path.join(os.path.dirname(__file__), "..",
+                       "BENCH_faults.json")
+    with open(os.path.abspath(out), "w") as f:
+        json.dump(snap, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in bench_faults():
+        print(row)

@@ -41,6 +41,10 @@ def main() -> None:
         from benchmarks.preemption_bench import bench_preemption
         for row in bench_preemption():
             print(row)
+    if only is None or "fault" in only:
+        from benchmarks.fault_bench import bench_faults
+        for row in bench_faults():
+            print(row)
     print(f"# total {time.time() - t_start:.1f}s")
 
 

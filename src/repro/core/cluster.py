@@ -31,6 +31,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.costmodel import CostModel, Hardware, V5E
+from repro.core.faults import (DEFAULT_RETRY, NO_RETRY, SITE_DECODE_CRASH,
+                               FaultInjector, FaultPlan, InstanceDown,
+                               RetryPolicy, TransferError)
 from repro.core.kv_transfer import (TransferPlan, plan as kv_plan,
                                     plan_chunked as kv_plan_chunked)
 from repro.core.mm_store import MMStore
@@ -53,6 +56,17 @@ class ClusterReport:
     preemptions: int = 0
     swapped_pages: int = 0           # host-link pages moved (out + in)
     admission_denials: int = 0       # inserts denied by the decode pool
+    # fault recovery (chaos layer): modeled retry time charged against
+    # latency accounting, per-arm counters, and every request the
+    # cluster gave up on — losses are surfaced, never silent.
+    retry_time_total: float = 0.0
+    store_retries: int = 0
+    transfer_retries: int = 0
+    transfer_replans: int = 0
+    instance_crashes: int = 0
+    reroutes: int = 0
+    swap_losses: int = 0
+    lost: List[Request] = field(default_factory=list)
 
     @property
     def mean_kv_overlap(self) -> float:
@@ -71,9 +85,27 @@ class EPDCluster:
                  n_prefill_pool_pages: Optional[int] = None,
                  chunked_prefill: bool = False, prefill_chunk: int = 32,
                  preemption: bool = False,
-                 n_decode_pool_pages: Optional[int] = None):
+                 n_decode_pool_pages: Optional[int] = None,
+                 n_decode: int = 1,
+                 faults: Optional[FaultPlan] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 recovery: bool = True):
         self.cfg = cfg
-        self.store = MMStore()
+        # one fault plane across every failure domain: store fetches,
+        # transfer groups, decode instances, and the swap tier all draw
+        # from the same seeded injector. faults=None keeps the zero-fault
+        # fast paths byte-identical to the pre-chaos cluster.
+        self.faults = faults
+        self.injector = FaultInjector(faults)
+        if retry is not None:
+            self.retry = retry
+        else:
+            # with a fault plan the recovery arms get the standard
+            # backoff policy; without one NO_RETRY preserves the legacy
+            # single-attempt store semantics (§3.2 recompute) exactly
+            self.retry = DEFAULT_RETRY if faults is not None else NO_RETRY
+        self.recovery = recovery
+        self.store = MMStore(injector=self.injector)
         self.cost = CostModel(cfg, hw,
                               page_tokens=page_size if paged else 0)
         self.kv_scheme = kv_scheme
@@ -84,7 +116,6 @@ class EPDCluster:
         # the shared pages and the transfer planner charges suffix-only)
         # and the chunked-prefill window (each chunk's pages stream to
         # Decode while the next chunk computes).
-        # Decode engine: the continuous-batching instance.
         self.prefill_engine = Engine(cfg, params, max_batch=1,
                                      max_len=max_len, paged=paged,
                                      page_size=page_size,
@@ -92,17 +123,50 @@ class EPDCluster:
                                      n_pool_pages=n_prefill_pool_pages,
                                      chunked_prefill=chunked_prefill,
                                      prefill_chunk=prefill_chunk)
-        # Decode engine: preemption=True turns decode-side pool pressure
-        # into page-level swap-to-host + resume instead of a pool error;
-        # n_decode_pool_pages sizes the pool below worst-case for
-        # overload experiments.
-        self.decode_engine = Engine(cfg, params, max_batch=max_batch,
-                                    max_len=max_len, paged=paged,
-                                    page_size=page_size,
-                                    n_pool_pages=n_decode_pool_pages,
-                                    preemption=preemption)
+        # Decode instances: preemption=True turns decode-side pool
+        # pressure into page-level swap-to-host + resume instead of a
+        # pool error; n_decode_pool_pages sizes the pool below
+        # worst-case for overload experiments; n_decode > 1 gives the
+        # crash re-route arm a surviving instance to land on.
+        if n_decode < 1:
+            raise ValueError("need n_decode >= 1")
+        self.decode_engines = [
+            Engine(cfg, params, max_batch=max_batch, max_len=max_len,
+                   paged=paged, page_size=page_size,
+                   n_pool_pages=n_decode_pool_pages,
+                   preemption=preemption, faults=self.injector)
+            for _ in range(n_decode)]
+        self.dead: set = set()           # indices of crashed instances
         self.report = ClusterReport()
         self._pending: List[Request] = []
+        # crash-harvested requests waiting for re-admission: (request,
+        # the decode-input token the resumed slot must feed next)
+        self._reroute_queue: List[Request] = []
+
+    # ---- decode-instance topology ----
+    @property
+    def decode_engine(self) -> Engine:
+        """First live decode instance (single-instance compatibility)."""
+        return self.decode_engines[self.live_decode_indices()[0]]
+
+    def live_decode_indices(self) -> List[int]:
+        out = [i for i in range(len(self.decode_engines))
+               if i not in self.dead]
+        if not out:
+            raise InstanceDown("all-decode", 0)
+        return out
+
+    def _pick_decode(self) -> Optional[Engine]:
+        """Least-loaded live instance with a free slot (ties -> lowest
+        index, so placement is deterministic); None when every live
+        instance is full."""
+        best = None
+        best_free = 0
+        for i in self.live_decode_indices():
+            free = len(self.decode_engines[i].free_slots())
+            if free > best_free:
+                best, best_free = self.decode_engines[i], free
+        return best
 
     # ---- Encode stage ----
     def encode(self, req: Request) -> Optional[str]:
@@ -121,12 +185,24 @@ class EPDCluster:
             self.store.stats.hits += 1
         return key
 
-    # ---- Prefill stage (with FT recompute on store miss) ----
+    # ---- Prefill stage (with FT retry + recompute on store miss) ----
     def prefill(self, req: Request, key: Optional[str]):
         mm = None
         enc = None
         if key is not None:
+            # layered store-fetch arm: retry with backoff per the policy
+            # (attempt keys the injector's draw, so transient faults
+            # heal), then fall back to the §3.2 local recompute. The
+            # default NO_RETRY policy keeps the legacy single-attempt
+            # behavior exactly.
             feats = self.store.get(key, record=False)
+            attempt = 1
+            while feats is None and attempt < self.retry.max_attempts:
+                back = self.retry.backoff(attempt, key=key)
+                self.report.retry_time_total += back
+                self.report.store_retries += 1
+                feats = self.store.get(key, record=False, attempt=attempt)
+                attempt += 1
             if feats is None:
                 # fault tolerance: recompute locally (paper §3.2)
                 feats = np.asarray(FE.stub_embeddings(
@@ -141,7 +217,8 @@ class EPDCluster:
         return first, caches
 
     # ---- P->D transfer + Decode import ----
-    def transfer_and_insert(self, req: Request, caches, first: int) -> None:
+    def transfer_and_insert(self, req: Request, caches, first: int,
+                            append_token: bool = True) -> None:
         # paged payloads already carry their page-granular byte count;
         # dense payloads are measured from the actual arrays.
         nbytes = getattr(caches, "kv_nbytes", None)
@@ -173,9 +250,22 @@ class EPDCluster:
                         handshake=self.cost.hw.handshake,
                         link_bw=self.cost.hw.link_bw,
                         page_bytes=self.cost.kv_page_bytes_per_layer())
+        # deliver the plan through the fault plane: transfer groups
+        # re-handshake/resend with backoff, exhausted groups replan
+        # fresh; the retry time lands in retry_time_total (latency
+        # accounting) and the *recovered* plan is what gets recorded.
+        if self.faults is not None:
+            p, rec = self.cost.recover_transfer(
+                p, self.injector,
+                self.retry if self.recovery else NO_RETRY,
+                key=req.request_id, replan=self.recovery)
+            self.report.transfer_retries += rec.retries
+            self.report.transfer_replans += rec.replanned_groups
+            self.report.retry_time_total += rec.retry_time
         # insert may preempt a decode victim to make room; only a
         # successful admission records the transfer plan
-        self.decode_engine.insert(req, caches, first)
+        engine = self._pick_decode() or self.decode_engine
+        engine.insert(req, caches, first, append_token=append_token)
         self.report.kv_plans.append(p)
 
     # ---- full pipeline ----
@@ -184,8 +274,11 @@ class EPDCluster:
         pool denied admission (exhausted even after preemption would
         leave no active slot): the request re-queues at the front and
         its payload is released — it re-prefills on retry (the prefix
-        cache, when enabled, makes that cheap)."""
-        if not self.decode_engine.free_slots():
+        cache, when enabled, makes that cheap). A request whose P->D
+        transfer is unrecoverable (retry + replan exhausted, or any
+        fault with recovery off) is killed and surfaced in
+        ``report.lost`` — never silently dropped."""
+        if self._pick_decode() is None:
             self._pending.append(req)
             return True
         key = self.encode(req)
@@ -199,23 +292,115 @@ class EPDCluster:
             self.report.admission_denials += 1
             self._pending.insert(0, req)
             return False
+        except TransferError:
+            if self.paged:
+                self.prefill_engine.release_payload(caches)
+            req.killed = True
+            self.report.lost.append(req)
+        return True
+
+    # ---- decode-instance crash + cross-instance re-route ----
+    def _maybe_crash(self, step: int) -> None:
+        """Consult the fault plane for instance crashes this step. The
+        last live instance is never crashed (a zero-instance cluster has
+        no recovery arm — that is a different failure class than the
+        paper's elastic churn)."""
+        for i in list(self.live_decode_indices()):
+            if len(self.live_decode_indices()) <= 1:
+                return
+            if self.injector.should_fail(SITE_DECODE_CRASH, key=(i, step)):
+                self._crash_instance(i)
+
+    def _crash_instance(self, i: int) -> None:
+        """Kill decode instance ``i`` mid-stream: its pool, KV, and swap
+        store vanish with it. In-flight requests (active slots AND
+        parked preemptees) are harvested for re-route when recovery is
+        on, else killed into ``report.lost``. Either way every affected
+        request is accounted for — never a silent drop."""
+        if i in self.dead:
+            raise InstanceDown(f"decode[{i}]", 0)
+        eng = self.decode_engines[i]
+        inflight = [r for r in eng.slots if r is not None]
+        inflight += [pr.req for pr in eng.preempted]
+        self.dead.add(i)
+        self.report.instance_crashes += 1
+        for req in inflight:
+            if self.recovery:
+                self._reroute_queue.append(req)
+            else:
+                req.killed = True
+                self.report.lost.append(req)
+
+    def _reroute_one(self, req: Request) -> bool:
+        """Re-route one crash-harvested request to a surviving instance.
+
+        At harvest time the request's KV covered
+        ``prompt + output_tokens[:-1]`` and the next decode input was
+        ``output_tokens[-1]`` — so a re-prefill of exactly that sequence
+        (riding the prefix cache: only the uncached suffix recomputes)
+        rebuilds bit-identical KV on the survivor, and ``insert`` with
+        ``append_token=False`` resumes decode at the exact position.
+        Returns False (request back at the queue head) when the
+        survivor's pool denied admission — retried after decode drains."""
+        seq = list(req.prompt_tokens) + list(req.output_tokens[:-1])
+        shadow = Request(prompt_tokens=seq, max_new_tokens=1,
+                         mm_payload=req.mm_payload,
+                         mm_tokens=req.mm_tokens, priority=req.priority)
+        key = self.encode(shadow)
+        first, caches = self.prefill(shadow, key)
+        try:
+            self.transfer_and_insert(req, caches,
+                                     int(req.output_tokens[-1]),
+                                     append_token=False)
+        except PoolExhausted:
+            if self.paged:
+                self.prefill_engine.release_payload(caches)
+            self.report.admission_denials += 1
+            self._reroute_queue.insert(0, req)
+            return False
+        except TransferError:
+            if self.paged:
+                self.prefill_engine.release_payload(caches)
+            req.killed = True
+            self.report.lost.append(req)
+            return True
+        self.report.reroutes += 1
         return True
 
     def run_until_done(self, max_steps: int = 1000) -> List[Request]:
         steps = 0
         done: List[Request] = []
-        while ((self.decode_engine.n_active or self._pending
-                or self.decode_engine.preempted) and steps < max_steps):
-            for r, _t, d in self.decode_engine.decode_step():
-                if d:
-                    done.append(r)
-            while self._pending and self.decode_engine.free_slots():
+
+        def live():
+            return [self.decode_engines[i]
+                    for i in self.live_decode_indices()]
+
+        while ((any(e.n_active or e.preempted for e in live())
+                or self._pending or self._reroute_queue)
+               and steps < max_steps):
+            self._maybe_crash(steps)
+            for eng in live():
+                if eng.n_active or eng.preempted:
+                    for r, _t, d in eng.decode_step():
+                        if d:
+                            done.append(r)
+                # swap-loss casualties (no recompute arm available)
+                while eng.lost:
+                    self.report.lost.append(eng.lost.pop(0))
+            while self._reroute_queue and self._pick_decode() is not None:
+                if not self._reroute_one(self._reroute_queue.pop(0)):
+                    break                  # denied: wait for drain
+            while self._pending and self._pick_decode() is not None:
                 if not self.submit(self._pending.pop(0)):
                     break                  # denied: wait for decode to drain
             steps += 1
         self.report.completed.extend(done)
-        self.report.preemptions = self.decode_engine.preempt_count
-        self.report.swapped_pages = (
-            self.decode_engine.swap_out_pages_total
-            + self.decode_engine.swap_in_pages_total)
+        self.report.preemptions = sum(e.preempt_count
+                                      for e in self.decode_engines)
+        self.report.swapped_pages = sum(
+            e.swap_out_pages_total + e.swap_in_pages_total
+            for e in self.decode_engines)
+        if self.paged:
+            self.report.swap_losses = sum(e.pool.swap_lost_total
+                                          for e in self.decode_engines)
         return done

@@ -236,6 +236,22 @@ class CostModel:
         t = nbytes / self.hw.link_bw
         return t + (self.hw.handshake if with_handshake else 0.0)
 
+    def recover_transfer(self, plan, injector, policy, key=None,
+                         replan: bool = True):
+        """Deliver a transfer plan through the fault plane: re-schedules
+        the plan's groups under the injector's handshake/wire faults with
+        the retry policy's backoff, falling back to a fresh grouped plan
+        for only the missing groups (kv_transfer.recover_plan), using
+        THIS hardware profile's handshake latency and link bandwidth —
+        the hook that charges retry time into simulator and cluster
+        latency accounting. Returns (recovered_plan, TransferRecovery);
+        raises TransferError when a group cannot be delivered at all."""
+        from repro.core import kv_transfer
+        return kv_transfer.recover_plan(
+            plan, injector=injector, policy=policy,
+            handshake=self.hw.handshake, link_bw=self.hw.link_bw,
+            key=key, replan=replan)
+
     def feature_transfer_time(self, nbytes: float) -> float:
         """E->P feature movement through the MM Store path."""
         return nbytes / self.hw.store_bw

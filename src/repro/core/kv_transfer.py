@@ -38,8 +38,12 @@ Metric definitions (paper Table 4):
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
-from typing import List, Literal
+from dataclasses import dataclass, field, replace
+from typing import Any, List, Literal, Optional, Tuple
+
+from repro.core.faults import (SITE_TRANSFER_HANDSHAKE, SITE_TRANSFER_WIRE,
+                               FaultInjector, PlanError, RetryPolicy,
+                               TransferError)
 
 Scheme = Literal["one_shot", "layer_wise", "grouped", "chunked"]
 
@@ -114,7 +118,28 @@ def plan(scheme: Scheme, *, n_layers: int, bytes_per_layer: float,
     on both ends and the wire never ships a partial page. The padding
     cost of the last partial page is thereby made explicit in the
     schedule instead of hidden in the runtime.
+
+    Invalid inputs raise :class:`~repro.core.faults.PlanError` (a
+    ValueError): a malformed plan request is a caller bug, not a
+    schedulable transfer, and must never half-build a schedule.
     """
+    if n_layers <= 0:
+        raise PlanError(f"n_layers must be >= 1, got {n_layers}")
+    if bytes_per_layer <= 0:
+        raise PlanError(
+            f"bytes_per_layer must be positive, got {bytes_per_layer}")
+    if per_layer_compute < 0:
+        raise PlanError(
+            f"per_layer_compute must be >= 0, got {per_layer_compute}")
+    if handshake < 0:
+        raise PlanError(f"handshake must be >= 0, got {handshake}")
+    if link_bw <= 0:
+        raise PlanError(f"link_bw must be positive, got {link_bw}")
+    if group_size < 0:
+        raise PlanError(
+            f"group_size must be >= 0 (0 = auto), got {group_size}")
+    if page_bytes < 0:
+        raise PlanError(f"page_bytes must be >= 0, got {page_bytes}")
     t_c = per_layer_compute
     if page_bytes > 0:
         bytes_per_layer = math.ceil(bytes_per_layer / page_bytes) * page_bytes
@@ -211,9 +236,21 @@ def plan_chunked(*, chunk_bytes: List[float], chunk_compute: List[float],
     :func:`plan`).
     """
     if len(chunk_bytes) != len(chunk_compute):
-        raise ValueError(
+        raise PlanError(
             f"{len(chunk_bytes)} byte segments vs "
             f"{len(chunk_compute)} compute segments")
+    if not chunk_bytes:
+        raise PlanError("empty segment list: nothing to plan")
+    if any(b < 0 for b in chunk_bytes):
+        raise PlanError(f"negative segment bytes in {chunk_bytes}")
+    if any(t < 0 for t in chunk_compute):
+        raise PlanError(f"negative segment compute in {chunk_compute}")
+    if handshake < 0:
+        raise PlanError(f"handshake must be >= 0, got {handshake}")
+    if link_bw <= 0:
+        raise PlanError(f"link_bw must be positive, got {link_bw}")
+    if page_bytes < 0:
+        raise PlanError(f"page_bytes must be >= 0, got {page_bytes}")
     groups: List[GroupPlan] = []
     clock = 0.0                        # compute-stream time
     link_free = 0.0
@@ -237,3 +274,140 @@ def plan_chunked(*, chunk_bytes: List[float], chunk_compute: List[float],
     eff_bw = payload / busy if busy > 0 else 0.0
     return TransferPlan("chunked", groups, prefill_end, prefill_end,
                         busy, exposed, eff_bw)
+
+
+# ---------------------------------------------------------------------------
+# Fault recovery: re-handshake/resend with backoff + fresh replan of
+# only the missing groups
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TransferRecovery:
+    """What it took to deliver a plan through an injected fault field."""
+
+    handshake_faults: int = 0
+    wire_faults: int = 0
+    retries: int = 0              # failed attempts that were retried
+    retry_time: float = 0.0       # backoff + wasted handshake/wire time
+    replanned_groups: int = 0     # groups delivered via the fresh replan
+    deadline_hits: int = 0        # groups whose retry budget ran out
+
+    @property
+    def faults(self) -> int:
+        return self.handshake_faults + self.wire_faults
+
+
+def _attempt_group(g: GroupPlan, clock: float, *, injector: FaultInjector,
+                   policy: RetryPolicy, handshake: float, link_bw: float,
+                   key: Any, tag: str, rec: TransferRecovery,
+                   retry_spent: float) -> Tuple[Optional[GroupPlan], float,
+                                                float]:
+    """Try to deliver one group starting at link time ``clock``.
+
+    Returns (delivered group or None, new link clock, retry time spent).
+    A failed handshake wastes its handshake latency; a failed wire
+    transfer wastes handshake + wire (the payload is resent whole —
+    partial-delivery resume is below the planning granularity). Between
+    attempts the link idles for the policy's seeded backoff. ``None``
+    means every attempt (or the retry-time deadline) was exhausted."""
+    wire = g.nbytes / link_bw
+    t = max(clock, g.t_ready)
+    for a in range(1, policy.max_attempts + 1):
+        hs_fail = injector.should_fail(
+            SITE_TRANSFER_HANDSHAKE, key=(key, tag, g.start), attempt=a)
+        wire_fail = (not hs_fail) and injector.should_fail(
+            SITE_TRANSFER_WIRE, key=(key, tag, g.start), attempt=a)
+        if not hs_fail and not wire_fail:
+            done = t + handshake + wire
+            return (replace(g, t_send=t + handshake, t_done=done),
+                    done, retry_spent)
+        wasted = handshake if hs_fail else handshake + wire
+        if hs_fail:
+            rec.handshake_faults += 1
+        else:
+            rec.wire_faults += 1
+        t += wasted
+        retry_spent += wasted
+        rec.retry_time += wasted
+        if a < policy.max_attempts:
+            if retry_spent >= policy.deadline:
+                rec.deadline_hits += 1
+                return None, t, retry_spent
+            back = policy.backoff(a, key=(key, tag, g.start))
+            t += back
+            retry_spent += back
+            rec.retry_time += back
+            rec.retries += 1
+    return None, t, retry_spent
+
+
+def recover_plan(plan: TransferPlan, *, injector: FaultInjector,
+                 policy: RetryPolicy, handshake: float, link_bw: float,
+                 key: Any = None,
+                 replan: bool = True) -> Tuple[TransferPlan,
+                                               TransferRecovery]:
+    """Re-schedule ``plan`` under the injector's transfer-fault field.
+
+    Layered recovery, per group and in link order:
+
+    1. re-handshake/resend with the policy's capped, seeded backoff —
+       transient handshake or wire faults heal in place;
+    2. groups that exhaust their attempts (or the per-request retry-time
+       deadline) fall back to a *fresh grouped plan covering only the
+       missing groups*, appended after the survivors (one new handshake
+       each, a fresh attempt budget — the §3.3 grouped machinery reused
+       as the repair path);
+    3. a group the replan also cannot deliver raises
+       :class:`TransferError` — with ``replan=False`` and
+       ``policy=NO_RETRY`` that is the recovery-off baseline, where any
+       fault loses the request.
+
+    The recovered plan keeps the original compute timeline
+    (``prefill_time`` / ``prefill_end``) — faults cost link time and
+    backoff, never compute — so TTFT inflation shows up purely in
+    ``exposed_latency`` / ``total_done``, which is exactly where the
+    simulator and cluster charge it. Payload is conserved: every
+    original group is delivered exactly once (possibly late)."""
+    if link_bw <= 0:
+        raise PlanError(f"link_bw must be positive, got {link_bw}")
+    if handshake < 0:
+        raise PlanError(f"handshake must be >= 0, got {handshake}")
+    rec = TransferRecovery()
+    delivered: List[GroupPlan] = []
+    missing: List[GroupPlan] = []
+    clock = 0.0
+    spent = 0.0
+    for g in plan.groups:
+        got, clock, spent = _attempt_group(
+            g, clock, injector=injector, policy=policy, handshake=handshake,
+            link_bw=link_bw, key=key, tag="xfer", rec=rec, retry_spent=spent)
+        if got is None:
+            missing.append(g)
+        else:
+            delivered.append(got)
+    if missing:
+        if not replan:
+            raise TransferError(SITE_TRANSFER_WIRE, missing[0].start,
+                                policy.max_attempts)
+        # fresh grouped plan for ONLY the missing groups: new handshakes,
+        # fresh attempt budgets, scheduled after the surviving traffic
+        rec.replanned_groups = len(missing)
+        for g in missing:
+            got, clock, spent = _attempt_group(
+                g, clock, injector=injector, policy=policy,
+                handshake=handshake, link_bw=link_bw, key=key,
+                tag="replan", rec=rec, retry_spent=0.0)
+            if got is None:
+                raise TransferError(SITE_TRANSFER_WIRE, g.start,
+                                    2 * policy.max_attempts)
+            delivered.append(got)
+    if rec.faults == 0:
+        return plan, rec            # zero-fault fast path: plan unchanged
+    total_done = max(g.t_done for g in delivered)
+    kv_latency = plan.kv_latency + rec.retry_time
+    exposed = max(0.0, total_done - plan.prefill_end)
+    payload = sum(g.nbytes for g in delivered)
+    eff_bw = payload / kv_latency if kv_latency > 0 else 0.0
+    out = TransferPlan(plan.scheme, delivered, plan.prefill_time,
+                       plan.prefill_end, kv_latency, exposed, eff_bw)
+    return out, rec

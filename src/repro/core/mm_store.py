@@ -11,6 +11,8 @@ import collections
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Tuple
 
+from repro.core.faults import SITE_STORE_FETCH, FaultInjector, StoreMiss
+
 
 @dataclass
 class StoreStats:
@@ -31,12 +33,16 @@ class StoreStats:
 class MMStore:
     """Hash-keyed feature pool with LRU eviction."""
 
-    def __init__(self, capacity_bytes: Optional[int] = None):
+    def __init__(self, capacity_bytes: Optional[int] = None,
+                 injector: Optional[FaultInjector] = None):
         self.capacity = capacity_bytes
         self._data: "collections.OrderedDict[str, Tuple[Any, int]]" = \
             collections.OrderedDict()
         self.stats = StoreStats()
-        self._fail_keys: set = set()
+        # All fault decisions route through the (possibly shared) fault
+        # plane; a private injector with an empty plan means "no faults"
+        # until someone arms one via inject_fault.
+        self.injector = injector if injector is not None else FaultInjector()
 
     # -- core API -------------------------------------------------------------
     def put(self, key: str, value: Any, nbytes: int) -> None:
@@ -49,13 +55,17 @@ class MMStore:
         self.stats.bytes_stored += nbytes
         self._evict()
 
-    def get(self, key: str, record: bool = True) -> Optional[Any]:
+    def get(self, key: str, record: bool = True,
+            attempt: int = 0) -> Optional[Any]:
         """record=False: internal fetch (e.g. the P-side prefetcher pulling
         a feature the E stage just produced) — served but not counted in
-        the hit/miss statistics, which track cross-request dedup."""
-        if key in self._fail_keys:
+        the hit/miss statistics, which track cross-request dedup.
+        ``attempt`` keys the injector's deterministic draw: a *retry* of
+        the same fetch re-draws, so transient faults heal under the
+        store-fetch retry arm."""
+        if self.injector.should_fail(SITE_STORE_FETCH, key=key,
+                                     attempt=attempt):
             # injected fault: behaves like a lost entry (paper §3.2 FT path)
-            self._fail_keys.discard(key)
             self.stats.faults_injected += 1
             if record:
                 self.stats.misses += 1
@@ -83,9 +93,21 @@ class MMStore:
             self.stats.bytes_stored -= nb
             self.stats.evictions += 1
 
+    def fetch(self, key: str, attempt: int = 0) -> Any:
+        """Typed fetch: like ``get`` but a lost/faulted/absent entry
+        raises :class:`StoreMiss` (carrying the key and attempt number)
+        instead of returning None — what the retry-then-recompute arm
+        catches."""
+        val = self.get(key, attempt=attempt)
+        if val is None:
+            raise StoreMiss(key, attempts=attempt + 1)
+        return val
+
     # -- fault injection --------------------------------------------------------
     def inject_fault(self, key: str) -> None:
-        self._fail_keys.add(key)
+        """Legacy one-shot hook, kept as a shim: arms exactly one
+        store-fetch fault for ``key`` on the shared injector."""
+        self.injector.arm(SITE_STORE_FETCH, key=key)
 
     def __len__(self) -> int:
         return len(self._data)

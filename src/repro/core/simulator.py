@@ -35,6 +35,8 @@ from repro.core import colocation
 from repro.core.costmodel import CostModel, Hardware, V5E
 from repro.core.deployment import Deployment, parse
 from repro.core.ep_prefetch import EPPrefetcher
+from repro.core.faults import (DEFAULT_RETRY, NO_RETRY, FaultInjector,
+                               FaultPlan, RetryPolicy, TransferError)
 from repro.core.events import EventLoop
 from repro.core.kv_transfer import (plan as kv_plan,
                                     plan_chunked as kv_plan_chunked)
@@ -144,6 +146,13 @@ class SimConfig:
     # victim policy as the real engine (scheduler.pick_preemption_victim).
     decode_kv_pages: int = 0
     preemption: bool = False
+    # failure-domain chaos layer: a seeded FaultPlan arms store-fetch
+    # and P->D transfer faults; `retry` is the typed backoff policy the
+    # recovery arms charge into latency; fault_recovery=False is the
+    # losing baseline (any transfer fault kills the request).
+    faults: Optional[FaultPlan] = None
+    retry: Optional[RetryPolicy] = None
+    fault_recovery: bool = True
 
 
 @dataclass
@@ -163,6 +172,10 @@ class SimMetrics:
     completed_requests: int = 0        # finished with full output
     killed_requests: int = 0           # dropped by decode-OOM (no preemption)
     n_preemptions: int = 0             # page-level preempt/swap events
+    # chaos layer: P->D transfer fault recovery accounting
+    lost_requests: int = 0             # unrecoverable transfer losses
+    transfer_retries: int = 0          # failed group attempts retried
+    retry_time_ms: float = 0.0         # modeled backoff + resend time
 
     def slo_attainment(self, ttft_ms: float, tpot_ms: float) -> float:
         ok = sum(r.meets_slo(ttft_ms, tpot_ms) for r in self.requests)
@@ -401,6 +414,22 @@ class _Instance:
                         handshake=sim.cfg.hw.handshake,
                         link_bw=sim.cfg.hw.link_bw,
                         page_bytes=sim.cost.kv_page_bytes_per_layer())
+        if sim.cfg.faults is not None:
+            # deliver the plan through the fault plane: retry/backoff +
+            # fresh replan of missing groups. TTFT inflation flows
+            # naturally through the recovered plan's exposed tail; an
+            # unrecoverable loss kills the request (surfaced in
+            # lost_requests, never silently dropped).
+            try:
+                p, rec = sim.cost.recover_transfer(
+                    p, sim.injector,
+                    sim.retry if sim.cfg.fault_recovery else NO_RETRY,
+                    key=req.request_id, replan=sim.cfg.fault_recovery)
+                sim.n_transfer_retries += rec.retries
+                sim.transfer_retry_time += rec.retry_time
+            except TransferError:
+                req.killed = True
+                sim.n_lost += 1
         sim.kv_plans.append(p)
         # layer-wise blocking handshakes stretch prefill itself
         sim.loop.after(p.prefill_end, lambda: self._finish_prefill(
@@ -411,6 +440,12 @@ class _Instance:
         sim = self.sim
 
         def emit() -> None:
+            if req.killed:
+                # lost on the P->D fabric (recovery exhausted or off):
+                # account and retire without a first token
+                req.t_done = sim.loop.now
+                sim.done.append(req)
+                return
             # first token gated on the Decode side holding the full KV
             # (kv_transfer's "TTFT gate"): the exposed transfer tail sits
             # on the TTFT critical path, which is what the grouped /
@@ -520,7 +555,16 @@ class Simulator:
         self.cost = CostModel(model, cfg.hw, page_tokens=cfg.kv_page_tokens)
         self.loop = EventLoop()
         self.router = Router(self.deployment)
-        self.store = MMStore()
+        # one seeded fault plane across the store and transfer domains.
+        # With a fault plan configured, recovery defaults to the standard
+        # backoff policy; without one, NO_RETRY keeps the legacy
+        # single-attempt semantics exactly.
+        self.injector = FaultInjector(cfg.faults)
+        if cfg.retry is not None:
+            self.retry = cfg.retry
+        else:
+            self.retry = DEFAULT_RETRY if cfg.faults is not None else NO_RETRY
+        self.store = MMStore(injector=self.injector)
         self.prefetcher = EPPrefetcher(self.loop, self.store, self.cost,
                                        async_mode=cfg.ep_async)
         self.instances = {s.name: _Instance(self, s)
@@ -531,6 +575,9 @@ class Simulator:
         self.prefix_prompt_tokens = 0.0
         self.n_preempted = 0
         self.n_killed = 0
+        self.n_lost = 0
+        self.n_transfer_retries = 0
+        self.transfer_retry_time = 0.0
         if cfg.prefix_cache:
             from repro.serving.prefix_cache import PrefixCache
             page = cfg.kv_page_tokens or 16
@@ -597,8 +644,12 @@ class Simulator:
         self.loop.run()
         assert len(self.done) == len(requests), \
             f"stuck: {len(self.done)}/{len(requests)} finished"
-        ttfts = sorted(r.ttft * 1e3 for r in self.done)
-        tpots = sorted(r.tpot * 1e3 for r in self.done)
+        # lost requests never emitted a first token: they are accounted
+        # in lost_requests, not in the latency percentiles
+        ttfts = sorted(r.ttft * 1e3 for r in self.done
+                       if r.t_first_token >= 0) or [0.0]
+        tpots = sorted(r.tpot * 1e3 for r in self.done
+                       if r.t_first_token >= 0) or [0.0]
         makespan = max(r.t_done for r in self.done) - min(
             r.t_arrival for r in self.done)
         toks = sum(len(r.output_tokens) for r in self.done)
@@ -620,6 +671,9 @@ class Simulator:
             completed_requests=sum(not r.killed for r in self.done),
             killed_requests=self.n_killed,
             n_preemptions=self.n_preempted,
+            lost_requests=self.n_lost,
+            transfer_retries=self.n_transfer_retries,
+            retry_time_ms=self.transfer_retry_time * 1e3,
         )
 
 
@@ -634,7 +688,10 @@ def simulate(model: ModelConfig, deployment: str, dataset: DatasetSpec,
              chunked_prefill: bool = False,
              prefill_chunk_tokens: int = 256,
              decode_kv_pages: int = 0,
-             preemption: bool = False) -> SimMetrics:
+             preemption: bool = False,
+             faults: Optional[FaultPlan] = None,
+             retry: Optional[RetryPolicy] = None,
+             fault_recovery: bool = True) -> SimMetrics:
     """Run one deployment against a trace injected at ``rate`` req/s.
 
     per_chip_rate=True multiplies the rate by the deployment's chip count
@@ -651,7 +708,9 @@ def simulate(model: ModelConfig, deployment: str, dataset: DatasetSpec,
                     chunked_prefill=chunked_prefill,
                     prefill_chunk_tokens=prefill_chunk_tokens,
                     decode_kv_pages=decode_kv_pages,
-                    preemption=preemption)
+                    preemption=preemption,
+                    faults=faults, retry=retry,
+                    fault_recovery=fault_recovery)
     sim = Simulator(model, cfg)
     if per_chip_rate:
         rate = rate * sim.deployment.n_chips

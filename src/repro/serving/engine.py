@@ -66,6 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.faults import FaultInjector, NoFreeSlot, SwapLost
 from repro.core.scheduler import VictimCandidate, pick_preemption_victim
 from repro.models import frontend as FE
 from repro.models.transformer import make_caches
@@ -111,7 +112,8 @@ class Engine:
                  n_pool_pages: Optional[int] = None,
                  prefix_cache: bool = False,
                  chunked_prefill: bool = False, prefill_chunk: int = 32,
-                 preemption: bool = False):
+                 preemption: bool = False,
+                 faults: Optional[FaultInjector] = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -141,7 +143,7 @@ class Engine:
             if n_pool_pages is None:
                 # all slots full + one in-flight prefill, + trash page 0
                 n_pool_pages = 1 + (max_batch + 1) * per_slot
-            self.pool = PagePool(n_pool_pages, page_size)
+            self.pool = PagePool(n_pool_pages, page_size, injector=faults)
             self.caches = make_caches(
                 cfg, max_batch, max_len, dtype=cache_dtype,
                 kv_dtype=kv_dtype, layout="paged", page_size=page_size,
@@ -160,12 +162,21 @@ class Engine:
             self.caches = make_caches(cfg, max_batch, max_len,
                                       dtype=cache_dtype, kv_dtype=kv_dtype)
         self.prefix_cache: Optional[PrefixCache] = None
+        self._prefill_suffix = None
         if prefix_cache or chunked_prefill:
             if cfg.encoder is not None or cfg.ssm_layers:
                 raise ValueError(
                     "prefix_cache/chunked_prefill need an attention-only "
                     "decoder: SSM state / cross-KV cannot be resumed "
                     "mid-sequence")
+        # the suffix-prefill step serves the prefix-cache hit path AND
+        # the recompute recovery arms (evicted-prefix re-fault, swap-loss
+        # suffix recompute) — a preemption engine on an attention-only
+        # decoder gets it even without a prefix cache, so a lost swap
+        # handle is recoverable instead of fatal.
+        if (prefix_cache or chunked_prefill
+                or (preemption and cfg.encoder is None
+                    and not cfg.ssm_layers)):
             self._prefill_suffix = make_prefill_fn(cfg, donate_caches=True,
                                                    prefix=True)
             self._cow_copy = make_pool_page_copy_fn()
@@ -192,6 +203,11 @@ class Engine:
         self.swap_in_pages_total = 0
         self.refault_pages_total = 0      # prefix pages recomputed on resume
         self._resume_marks: Dict[int, int] = {}
+        # swap-loss recovery: resumes that had to recompute their private
+        # pages because the host swap tier lost the handle, and requests
+        # that could not be recovered (no suffix step / multimodal).
+        self.swap_lost_recomputes = 0
+        self.lost: List[Request] = []
 
     # -- capacity ------------------------------------------------------------
     def free_slots(self) -> List[int]:
@@ -404,8 +420,13 @@ class Engine:
         if pr.handle is not None:
             # hand the reserved pages back so swap_in (the only consumer
             # of the handle) re-pops exactly them — it cannot fail now
+            # on pool pressure (it CAN still lose the handle's contents
+            # when the swap-tier fault site fires, see below)
             self.pool.free(ids_all[n_miss:])
-            ids, data = self.pool.swap_in(pr.handle)
+            try:
+                ids, data = self.pool.swap_in(pr.handle)
+            except SwapLost:
+                return self._recover_swap_lost(pr, slot, row, n_shared)
             row[n_shared:n_shared + len(ids)] = ids
             self.caches["attn"] = self._scatter_pages(
                 self.caches["attn"], data, jnp.asarray(ids))
@@ -416,6 +437,62 @@ class Engine:
         self.slots[slot] = pr.req
         self._last_tok[slot] = pr.last_tok
         self._resume_marks[pr.req.request_id] = len(pr.req.output_tokens)
+        self.resume_count += 1
+        return True
+
+    def _recover_swap_lost(self, pr: PreemptedRequest, slot: int,
+                           row: np.ndarray, n_shared: int) -> bool:
+        """Swap-loss recovery arm: the host swap tier lost the handle's
+        contents mid-``_resume`` (the handle is consumed — there is
+        nothing left to retry against). The KV it held is nonetheless
+        reconstructible: at preemption the cache covered
+        ``prompt + output_tokens[:-1]`` (the final output token is
+        ``last_tok``, still waiting to be fed), and greedy decode is
+        deterministic — so recomputing exactly those token positions
+        through the suffix-prefill step rebuilds bit-identical KV in
+        fresh private pages, and decode resumes at the exact position.
+
+        Engines without the suffix step (SSM / cross-attention decoders)
+        or multimodal requests (their feature embeddings are not
+        retained) cannot recompute: the request is killed, every page
+        ref unwound, and the loss surfaced via ``self.lost`` — never a
+        silent drop. Always returns True: the preempted entry is
+        consumed either way (the handle no longer exists)."""
+        req = pr.req
+        page = self.page_size
+        n_priv = pr.n_pages - n_shared
+        if self._prefill_suffix is None or req.is_multimodal:
+            if n_shared:
+                self.pool.unref(row[:n_shared])
+            req.killed = True
+            self.lost.append(req)
+            return True
+        # the reservation freed just before swap_in is still on the free
+        # list — reclaim it for the recomputed copies
+        ids = self._alloc_pages(n_priv)
+        row[n_shared:n_shared + n_priv] = ids
+        seq = list(req.prompt_tokens) + list(req.output_tokens[:-1])
+        pos = n_shared * page
+        win = n_priv * page
+        sfx = np.zeros((1, win), np.int32)
+        sfx[0, :len(seq) - pos] = seq[pos:]
+        side = self._side_caches()
+        pcaches = {"attn": self.caches["attn"], "ssm": side["ssm"],
+                   "cross": side["cross"], "len": side["len"],
+                   "pages": jnp.asarray(row[None])}
+        _, new = self._prefill_suffix(
+            self.params, jnp.asarray(sfx),
+            jnp.asarray([len(seq)], jnp.int32), pcaches,
+            jnp.asarray(pos, jnp.int32), jnp.asarray(pos, jnp.int32))
+        self.caches["attn"] = new["attn"]
+        self.swap_lost_recomputes += 1
+        self.refault_pages_total += n_priv
+        self.caches = self._insert_side(pr.side, self.caches,
+                                        jnp.asarray(row), slot)
+        self._slot_pages[slot] = np.asarray(row[:pr.n_pages], np.int32)
+        self.slots[slot] = req
+        self._last_tok[slot] = pr.last_tok
+        self._resume_marks[req.request_id] = len(req.output_tokens)
         self.resume_count += 1
         return True
 
@@ -577,7 +654,8 @@ class Engine:
             chunks=chunks if self.chunked_prefill else [])
         return first, payload
 
-    def insert(self, req: Request, prefilled, first_token: int) -> int:
+    def insert(self, req: Request, prefilled, first_token: int,
+               append_token: bool = True) -> int:
         """Attach a prefilled request to a free decode slot (P->D import).
 
         Dense: copy the batch-1 cache into batch slot ``slot``.
@@ -586,10 +664,15 @@ class Engine:
         A failed paged insert (no free slot, destination pool full)
         raises before mutating anything: the payload stays retryable.
         Abandon one with ``release_payload`` or its pages leak.
+
+        ``append_token=False`` skips recording ``first_token`` as a new
+        output: a re-route/migration insert resumes a request whose
+        ``output_tokens`` already contain it (the token is only the next
+        decode input, not new progress).
         """
         free = self.free_slots()
         if not free:
-            raise RuntimeError("no free decode slot")
+            raise NoFreeSlot()
         slot = free[0]
         if self.paged:
             self._insert_paged(prefilled, slot)
@@ -599,7 +682,8 @@ class Engine:
             self.kv_insert_bytes_total += self.kv_insert_bytes
         self.slots[slot] = req
         self._last_tok[slot] = first_token
-        req.output_tokens.append(first_token)
+        if append_token:
+            req.output_tokens.append(first_token)
         return slot
 
     def release_payload(self, payload: PagedKVPayload) -> None:

@@ -48,9 +48,11 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterable, List, Sequence, Tuple
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from repro.core.faults import SITE_SWAP_IN, FaultInjector, SwapLost
 
 TRASH_PAGE = 0
 
@@ -101,13 +103,18 @@ class PagePool:
     free list (the old O(n^2) double-free check).
     """
 
-    def __init__(self, n_pages: int, page_size: int):
+    def __init__(self, n_pages: int, page_size: int,
+                 injector: Optional[FaultInjector] = None):
         if n_pages < 2:
             raise ValueError("need n_pages >= 2 (page 0 is reserved)")
         if page_size < 1:
             raise ValueError("page_size must be positive")
         self.n_pages = int(n_pages)
         self.page_size = int(page_size)
+        # fault plane for the host swap tier (SITE_SWAP_IN); a private
+        # empty-plan injector means swap_in never faults.
+        self.injector = injector if injector is not None else FaultInjector()
+        self.swap_lost_total = 0
         # LIFO free list: recently freed pages are re-used first (their
         # contents are most likely still resident in cache hierarchies).
         self._free: List[int] = list(range(n_pages - 1, 0, -1))
@@ -213,6 +220,14 @@ class PagePool:
         if handle.handle_id not in self._swap:
             raise ValueError(f"unknown or already-consumed swap "
                              f"handle {handle.handle_id}")
+        if self.injector.should_fail(SITE_SWAP_IN, key=handle.handle_id):
+            # host swap tier lost the contents: the entry is gone for
+            # good (the handle is consumed — there is nothing to retry
+            # against), so the caller must take the suffix-recompute
+            # arm. Raised BEFORE alloc: no device pages were taken.
+            del self._swap[handle.handle_id]
+            self.swap_lost_total += 1
+            raise SwapLost(handle.handle_id, handle.n_pages)
         ids = self.alloc(handle.n_pages)       # may raise: handle intact
         _, data = self._swap.pop(handle.handle_id)
         self.swapped_in_pages_total += handle.n_pages

@@ -1,0 +1,455 @@
+"""Failure-domain chaos layer: deterministic injection, typed errors,
+retry/backoff, and the four recovery arms (store refetch->recompute,
+transfer retry->replan, swap-loss suffix recompute, decode-crash
+cross-instance re-route) — each proven bit-identical to its fault-free
+run where the tentpole demands it."""
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core import kv_transfer as kt
+from repro.core.cluster import EPDCluster
+from repro.core.faults import (DEFAULT_RETRY, NO_RETRY, SITE_STORE_FETCH,
+                               SITE_SWAP_IN, SITE_TRANSFER_WIRE, SITES,
+                               ArmedFault, FaultError, FaultInjector,
+                               FaultPlan, InstanceDown, NoFreeSlot,
+                               PlanError, RetryPolicy, StoreMiss, SwapLost,
+                               TransferError, _unit)
+from repro.core.mm_store import MMStore
+from repro.models.model import init_params
+from repro.serving.engine import Engine
+from repro.serving.kv_pool import PagePool
+from repro.serving.request import Request
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = get_config("smollm-135m").reduced()
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def llava():
+    cfg = get_config("llava-next-mistral-7b").reduced()
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# deterministic fault plane
+# ---------------------------------------------------------------------------
+
+def test_unit_draw_is_pure_and_seeded():
+    a = _unit(3, "transfer.wire", ("r", 1), 0)
+    assert a == _unit(3, "transfer.wire", ("r", 1), 0)
+    assert 0.0 <= a < 1.0
+    # any coordinate change moves the draw
+    assert a != _unit(4, "transfer.wire", ("r", 1), 0)
+    assert a != _unit(3, "transfer.handshake", ("r", 1), 0)
+    assert a != _unit(3, "transfer.wire", ("r", 2), 0)
+    assert a != _unit(3, "transfer.wire", ("r", 1), 1)
+
+
+def test_injector_replay_is_deterministic():
+    plan = FaultPlan(seed=11, rates={s: 0.3 for s in SITES})
+    calls = [(s, k, a) for s in sorted(SITES)
+             for k in ("x", ("g", 2), None) for a in (0, 1)]
+    r1 = [FaultInjector(plan).should_fail(s, k, a) for s, k, a in calls]
+    inj = FaultInjector(plan)
+    r2 = [inj.should_fail(s, k, a) for s, k, a in calls]
+    assert r1 == r2
+    assert any(r1) and not all(r1)
+    assert inj.stats.checks and inj.n_fired() == sum(r1)
+
+
+def test_injector_rate_independent_of_call_order():
+    """The same (site, key, attempt) coordinate gives the same answer no
+    matter what was checked before it — decisions are a pure function of
+    the plan, never of interleaving."""
+    plan = FaultPlan(seed=5, rates={SITE_TRANSFER_WIRE: 0.5})
+    a = FaultInjector(plan)
+    _ = [a.should_fail(SITE_TRANSFER_WIRE, key=i) for i in range(20)]
+    target = a.should_fail(SITE_TRANSFER_WIRE, key="probe")
+    b = FaultInjector(plan)
+    assert b.should_fail(SITE_TRANSFER_WIRE, key="probe") == target
+
+
+def test_armed_faults_fire_first_and_decrement():
+    inj = FaultInjector(FaultPlan(armed=[
+        ArmedFault(SITE_STORE_FETCH, key="k", count=2)]))
+    assert inj.armed_remaining == 2
+    assert not inj.should_fail(SITE_STORE_FETCH, key="other")
+    assert inj.should_fail(SITE_STORE_FETCH, key="k")
+    assert inj.should_fail(SITE_STORE_FETCH, key="k")
+    assert not inj.should_fail(SITE_STORE_FETCH, key="k")
+    assert inj.armed_remaining == 0
+    # key=None arms match any key
+    inj.arm(SITE_SWAP_IN)
+    assert inj.should_fail(SITE_SWAP_IN, key=123)
+
+
+def test_rate_cap_bounds_probabilistic_fires():
+    plan = FaultPlan(seed=0, rates={SITE_TRANSFER_WIRE: 1.0},
+                     max_faults={SITE_TRANSFER_WIRE: 3})
+    inj = FaultInjector(plan)
+    fired = sum(inj.should_fail(SITE_TRANSFER_WIRE, key=i)
+                for i in range(10))
+    assert fired == 3
+
+
+def test_plan_and_policy_validation():
+    with pytest.raises(PlanError, match="unknown fault site"):
+        FaultPlan(rates={"nope": 0.5}).validate()
+    with pytest.raises(PlanError, match="rate"):
+        FaultPlan(rates={SITE_SWAP_IN: 1.5}).validate()
+    with pytest.raises(PlanError, match="count"):
+        FaultPlan(armed=[ArmedFault(SITE_SWAP_IN, count=0)]).validate()
+    with pytest.raises(PlanError):
+        FaultInjector().should_fail("not.a.site")
+    with pytest.raises(PlanError, match="max_attempts"):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(PlanError, match="jitter"):
+        RetryPolicy(jitter=2.0)
+    with pytest.raises(PlanError, match="backoff_mult"):
+        RetryPolicy(backoff_mult=0.5)
+    # PlanError is catchable as both branches of its legacy ancestry
+    assert issubclass(PlanError, ValueError)
+    assert issubclass(PlanError, RuntimeError)
+    assert issubclass(PlanError, FaultError)
+
+
+def test_retry_policy_backoff_capped_and_seeded():
+    p = RetryPolicy(max_attempts=6, backoff_base=1e-3, backoff_mult=2.0,
+                    backoff_cap=4e-3, jitter=0.1, seed=9)
+    delays = [p.backoff(a, key="op") for a in range(1, 6)]
+    assert delays == [p.backoff(a, key="op") for a in range(1, 6)]  # replay
+    for a, d in enumerate(delays, start=1):
+        raw = min(4e-3, 1e-3 * 2.0 ** (a - 1))
+        assert raw * 0.9 <= d <= raw * 1.1
+    assert sum(delays) <= p.worst_case_retry_time() + 1e-12
+    assert RetryPolicy(jitter=0.0).backoff(1) == 2e-3
+    assert NO_RETRY.max_attempts == 1 and NO_RETRY.worst_case_retry_time() == 0
+
+
+# ---------------------------------------------------------------------------
+# kv_transfer: plan input validation (typed) + recovery
+# ---------------------------------------------------------------------------
+
+def test_plan_input_validation():
+    ok = dict(n_layers=4, bytes_per_layer=1e6, per_layer_compute=1e-3,
+              handshake=1e-3, link_bw=1e9)
+    kt.plan("grouped", **ok)                       # sanity: valid baseline
+    for bad in (dict(n_layers=0), dict(bytes_per_layer=0.0),
+                dict(bytes_per_layer=-1.0), dict(per_layer_compute=-1e-3),
+                dict(handshake=-1e-3), dict(link_bw=0.0),
+                dict(group_size=-1), dict(page_bytes=-1.0)):
+        with pytest.raises(PlanError):
+            kt.plan("grouped", **{**ok, **bad})
+
+
+def test_plan_chunked_input_validation():
+    ok = dict(chunk_bytes=[1e6, 2e6], chunk_compute=[1e-3, 2e-3],
+              handshake=1e-3, link_bw=1e9)
+    kt.plan_chunked(**ok)
+    with pytest.raises(PlanError):
+        kt.plan_chunked(**{**ok, "chunk_bytes": []})
+    with pytest.raises(PlanError):
+        kt.plan_chunked(**{**ok, "chunk_bytes": [1e6, -1.0]})
+    with pytest.raises(PlanError):
+        kt.plan_chunked(**{**ok, "chunk_compute": [1e-3, -1.0]})
+    with pytest.raises(PlanError):
+        kt.plan_chunked(**{**ok, "link_bw": 0.0})
+    # legacy compat: length mismatch stays a ValueError matching "segments"
+    with pytest.raises(ValueError, match="segments"):
+        kt.plan_chunked(**{**ok, "chunk_compute": [1e-3]})
+
+
+def _plan():
+    return kt.plan("grouped", n_layers=8, bytes_per_layer=1e6,
+                   per_layer_compute=1e-3, handshake=1e-3, link_bw=1e9,
+                   group_size=2)
+
+
+def test_recover_plan_zero_fault_is_identity():
+    p = _plan()
+    out, rec = kt.recover_plan(p, injector=FaultInjector(),
+                               policy=DEFAULT_RETRY, handshake=1e-3,
+                               link_bw=1e9)
+    assert out is p and rec.faults == 0 and rec.retry_time == 0.0
+
+
+def test_recover_plan_transient_fault_heals_with_charged_retry():
+    p = _plan()
+    inj = FaultInjector(FaultPlan(armed=[ArmedFault(SITE_TRANSFER_WIRE)]))
+    out, rec = kt.recover_plan(p, injector=inj, policy=DEFAULT_RETRY,
+                               handshake=1e-3, link_bw=1e9, key="req")
+    assert rec.wire_faults == 1 and rec.retries == 1
+    assert rec.retry_time > 0
+    # payload conserved: every group delivered exactly once
+    assert sorted(g.start for g in out.groups) == \
+        sorted(g.start for g in p.groups)
+    assert sum(g.nbytes for g in out.groups) == \
+        sum(g.nbytes for g in p.groups)
+    # compute timeline untouched; latency/exposure absorb the retry
+    assert out.prefill_end == p.prefill_end
+    assert out.kv_latency > p.kv_latency
+    assert out.exposed_latency >= p.exposed_latency
+
+
+def test_recover_plan_exhausted_group_takes_fresh_replan():
+    p = _plan()
+    # enough armed faults to exhaust one group's attempts, then heal
+    n = DEFAULT_RETRY.max_attempts
+    inj = FaultInjector(FaultPlan(armed=[
+        ArmedFault(SITE_TRANSFER_WIRE, count=n)]))
+    out, rec = kt.recover_plan(p, injector=inj, policy=DEFAULT_RETRY,
+                               handshake=1e-3, link_bw=1e9, key="req")
+    assert rec.replanned_groups >= 1
+    assert sorted(g.start for g in out.groups) == \
+        sorted(g.start for g in p.groups)
+
+
+def test_recover_plan_recovery_off_raises_typed():
+    p = _plan()
+    inj = FaultInjector(FaultPlan(armed=[ArmedFault(SITE_TRANSFER_WIRE)]))
+    with pytest.raises(TransferError) as ei:
+        kt.recover_plan(p, injector=inj, policy=NO_RETRY, handshake=1e-3,
+                        link_bw=1e9, replan=False)
+    assert ei.value.site == SITE_TRANSFER_WIRE
+    assert isinstance(ei.value, RuntimeError)
+
+
+def test_recover_plan_deadline_escalates_to_replan():
+    p = _plan()
+    inj = FaultInjector(FaultPlan(armed=[
+        ArmedFault(SITE_TRANSFER_WIRE, count=2)]))
+    policy = RetryPolicy(max_attempts=5, deadline=1e-9)   # no retry budget
+    out, rec = kt.recover_plan(p, injector=inj, policy=policy,
+                               handshake=1e-3, link_bw=1e9, key="req")
+    assert rec.deadline_hits >= 1 and rec.replanned_groups >= 1
+    assert sorted(g.start for g in out.groups) == \
+        sorted(g.start for g in p.groups)
+
+
+# ---------------------------------------------------------------------------
+# MM store: injector routing + typed fetch
+# ---------------------------------------------------------------------------
+
+def test_store_legacy_inject_fault_shim_is_one_shot():
+    s = MMStore()
+    s.put("k", "v", 8)
+    s.inject_fault("k")
+    assert s.get("k") is None                   # the injected loss
+    assert s.get("k") == "v"                    # one-shot: healed
+    assert s.stats.faults_injected == 1
+
+
+def test_store_multi_shot_and_rates():
+    s = MMStore()
+    s.put("k", "v", 8)
+    s.injector.arm(SITE_STORE_FETCH, key="k", count=3)
+    assert [s.get("k") for _ in range(4)] == [None, None, None, "v"]
+    # per-site rates through a shared plan
+    s2 = MMStore(injector=FaultInjector(
+        FaultPlan(seed=2, rates={SITE_STORE_FETCH: 1.0},
+                  max_faults={SITE_STORE_FETCH: 2})))
+    s2.put("k", "v", 8)
+    assert s2.get("k") is None and s2.get("k") is None
+    assert s2.get("k") == "v"
+
+
+def test_store_typed_fetch_and_retry_heal():
+    s = MMStore()
+    s.put("k", "v", 8)
+    s.inject_fault("k")
+    with pytest.raises(StoreMiss) as ei:
+        s.fetch("k")
+    assert ei.value.key == "k"
+    # a retry (attempt=1) re-draws: the armed fault is consumed, heals
+    assert s.fetch("k", attempt=1) == "v"
+    with pytest.raises(StoreMiss):
+        s.fetch("absent")
+
+
+# ---------------------------------------------------------------------------
+# typed errors replacing string raises
+# ---------------------------------------------------------------------------
+
+def test_no_free_slot_is_typed_and_legacy_compatible(smollm):
+    cfg, params = smollm
+    eng = Engine(cfg, params, max_batch=1, max_len=32)
+    r1 = Request(prompt_tokens=[3, 4, 5], max_new_tokens=4)
+    f, c = eng.prefill_request(r1)
+    eng.insert(r1, c, f)
+    r2 = Request(prompt_tokens=[6, 7, 8], max_new_tokens=4)
+    f2, c2 = eng.prefill_request(r2)
+    with pytest.raises(NoFreeSlot):
+        eng.insert(r2, c2, f2)
+    with pytest.raises(RuntimeError, match="no free decode slot"):
+        eng.insert(r2, c2, f2)                  # legacy string-match path
+
+
+def test_swap_lost_semantics():
+    inj = FaultInjector(FaultPlan(armed=[ArmedFault(SITE_SWAP_IN)]))
+    pool = PagePool(9, 4, injector=inj)
+    ids = pool.alloc(3)
+    h = pool.swap_out(ids, data="kv")
+    with pytest.raises(SwapLost) as ei:
+        pool.swap_in(h)
+    assert ei.value.handle_id == h.handle_id
+    assert ei.value.n_pages == 3
+    # the entry is gone: the handle is consumed, pages stay free, the
+    # audit balances with no outstanding handles
+    assert pool.n_swapped_pages == 0 and pool.n_free == 8
+    assert pool.swap_lost_total == 1
+    pool.assert_balanced()
+    with pytest.raises(ValueError, match="unknown or already-consumed"):
+        pool.swap_in(h)
+
+
+# ---------------------------------------------------------------------------
+# recovery arms on the REAL cluster/engine
+# ---------------------------------------------------------------------------
+
+def _text_reqs(n=4, m=8):
+    return [Request(prompt_tokens=list(range(3 + i, 20 + i)),
+                    max_new_tokens=m) for i in range(n)]
+
+
+def test_cluster_store_retry_arm_heals_before_recompute(llava):
+    cfg, params = llava
+    cl = EPDCluster(cfg, params, max_batch=2, max_len=64,
+                    faults=FaultPlan(seed=0), retry=DEFAULT_RETRY)
+    req = Request(prompt_tokens=[3, 4, 5, 6], max_new_tokens=2,
+                  mm_payload=b"x", mm_tokens=4)
+    key = cl.encode(req)
+    cl.store.inject_fault(key)           # one-shot: first attempt fails
+    cl.prefill(req, key)
+    assert cl.report.store_retries == 1  # healed on retry
+    assert cl.report.recomputes == 0
+    assert cl.report.retry_time_total > 0
+
+
+def test_cluster_store_exhausted_retries_take_recompute_arm(llava):
+    cfg, params = llava
+    cl = EPDCluster(cfg, params, max_batch=2, max_len=64,
+                    faults=FaultPlan(seed=0),
+                    retry=RetryPolicy(max_attempts=2))
+    req = Request(prompt_tokens=[3, 4, 5, 6], max_new_tokens=2,
+                  mm_payload=b"x", mm_tokens=4)
+    key = cl.encode(req)
+    cl.store.injector.arm(SITE_STORE_FETCH, key=key, count=5)
+    cl.prefill(req, key)
+    assert cl.report.store_retries == 1           # both attempts failed
+    assert cl.report.recomputes == 1              # §3.2 local recompute
+
+
+def test_cluster_decode_crash_reroute_bit_identical(smollm):
+    cfg, params = smollm
+    ref = _text_reqs()
+    c0 = EPDCluster(cfg, params, max_batch=2, max_len=64, paged=True,
+                    page_size=8, prefix_cache=True, n_decode=2)
+    for r in ref:
+        c0.submit(r)
+    c0.run_until_done()
+
+    plan = FaultPlan(seed=1, armed=[ArmedFault("decode.crash",
+                                               key=(0, 3))])
+    reqs = _text_reqs()
+    c1 = EPDCluster(cfg, params, max_batch=2, max_len=64, paged=True,
+                    page_size=8, prefix_cache=True, n_decode=2,
+                    faults=plan)
+    for r in reqs:
+        c1.submit(r)
+    done = c1.run_until_done()
+    assert c1.report.instance_crashes == 1
+    assert c1.report.reroutes >= 1
+    assert not c1.report.lost and len(done) == len(reqs)
+    for a, b in zip(ref, reqs):
+        assert a.output_tokens == b.output_tokens
+    # the re-prefill rode the prefix cache: its suffix-only compute is
+    # visible as cached tokens on the prefill engine
+    assert c1.prefill_engine.prefill_tokens_computed < \
+        c1.prefill_engine.prefill_tokens_total
+    # survivors stay leak-free (the dead instance vanished with its pool)
+    for i in c1.live_decode_indices():
+        c1.decode_engines[i].assert_no_page_leaks()
+    c1.prefill_engine.assert_no_page_leaks()
+
+
+def test_cluster_decode_crash_recovery_off_loses_requests(smollm):
+    cfg, params = smollm
+    plan = FaultPlan(seed=1, armed=[ArmedFault("decode.crash",
+                                               key=(0, 3))])
+    reqs = _text_reqs()
+    cl = EPDCluster(cfg, params, max_batch=2, max_len=64, paged=True,
+                    page_size=8, prefix_cache=True, n_decode=2,
+                    faults=plan, recovery=False)
+    for r in reqs:
+        cl.submit(r)
+    done = cl.run_until_done()
+    assert cl.report.instance_crashes == 1
+    assert len(cl.report.lost) >= 1
+    assert all(r.killed for r in cl.report.lost)
+    # accounting closes: every request is either done or surfaced lost
+    assert len(done) + len(cl.report.lost) == len(reqs)
+
+
+def test_crash_twice_is_typed_instance_down(smollm):
+    cfg, params = smollm
+    cl = EPDCluster(cfg, params, max_batch=2, max_len=64, n_decode=2)
+    cl._crash_instance(0)
+    with pytest.raises(InstanceDown):
+        cl._crash_instance(0)
+
+
+def test_engine_swap_lost_recompute_bit_identical(smollm):
+    cfg, params = smollm
+
+    def serve(eng, preempt_at=()):
+        r = Request(prompt_tokens=list(range(3, 20)), max_new_tokens=8)
+        f, p = eng.prefill_request(r)
+        eng.insert(r, p, f)
+        step = 0
+        while (any(s is r for s in eng.slots)
+               or any(pr.req is r for pr in eng.preempted)):
+            if step in preempt_at and any(s is r for s in eng.slots):
+                eng.preempt_slot(next(i for i, s in enumerate(eng.slots)
+                                      if s is r))
+            eng.decode_step()
+            step += 1
+            assert step < 100
+        return r
+
+    e0 = Engine(cfg, params, max_batch=2, max_len=64, paged=True,
+                page_size=8, preemption=True)
+    ref = serve(e0, preempt_at=(3,))
+
+    inj = FaultInjector(FaultPlan(armed=[ArmedFault(SITE_SWAP_IN)]))
+    e1 = Engine(cfg, params, max_batch=2, max_len=64, paged=True,
+                page_size=8, preemption=True, faults=inj)
+    out = serve(e1, preempt_at=(3,))
+    assert out.output_tokens == ref.output_tokens
+    assert e1.swap_lost_recomputes == 1
+    assert e1.pool.swap_lost_total == 1
+    e1.assert_no_page_leaks()
+    assert e1.pool.n_used == 0
+
+
+def test_cluster_swap_loss_surfaces_in_report(smollm):
+    """A preemption cluster under an armed swap-in loss still completes
+    every request (suffix recompute) and reports the loss count."""
+    cfg, params = smollm
+    plan = FaultPlan(seed=3, armed=[ArmedFault(SITE_SWAP_IN)])
+    reqs = [Request(prompt_tokens=list(range(3 + i, 19 + i)),
+                    max_new_tokens=10) for i in range(3)]
+    cl = EPDCluster(cfg, params, max_batch=2, max_len=64, paged=True,
+                    page_size=4, preemption=True,
+                    n_decode_pool_pages=17, faults=plan)
+    for r in reqs:
+        cl.submit(r)
+    done = cl.run_until_done(max_steps=300)
+    assert len(done) + len(cl.report.lost) == len(reqs)
+    if cl.report.preemptions:
+        assert cl.report.swap_losses >= 0   # populated from pools
+    for i in cl.live_decode_indices():
+        cl.decode_engines[i].assert_no_page_leaks()
