@@ -77,6 +77,9 @@ def bench_chunked_prefill() -> List[str]:
         eng.release_payload(payload)
         eng.assert_no_page_leaks()
     snap["leaked_pages"] = 0
+    # unified metrics registry of the chunked engine (prefill token
+    # counters, pool occupancy gauges) — the common bench telemetry key
+    snap["telemetry"] = c_eng.metrics.snapshot()
     rows.append(f"window_tokens,{chunk},vs_{max_len}_monolithic_"
                 f"{max_len / chunk:.0f}x_smaller")
     rows.append(f"peak_pages,{c_eng.pool.peak_used},"

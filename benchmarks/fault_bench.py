@@ -36,6 +36,7 @@ def bench_faults() -> List[str]:
     from repro.core.faults import (SITE_DECODE_CRASH, SITE_TRANSFER_WIRE,
                                    ArmedFault, FaultPlan)
     from repro.core.simulator import SHAREGPT_4O, simulate
+    from repro.core.telemetry import Tracer
     from repro.models.model import init_params
     from repro.serving.request import Request
 
@@ -52,10 +53,11 @@ def bench_faults() -> List[str]:
         return [Request(prompt_tokens=list(range(3 + i, 20 + i)),
                         max_new_tokens=8) for i in range(4)]
 
-    def run(faults=None, recovery=True):
+    def run(faults=None, recovery=True, tracer=None):
         cl = EPDCluster(cfg, params, max_batch=2, max_len=64, paged=True,
                         page_size=8, prefix_cache=True, n_decode=2,
-                        faults=faults, recovery=recovery)
+                        chunked_prefill=True, prefill_chunk=8,
+                        faults=faults, recovery=recovery, tracer=tracer)
         rs = reqs()
         for r in rs:
             cl.submit(r)
@@ -63,9 +65,12 @@ def bench_faults() -> List[str]:
         return cl, rs, done
 
     _, ref, _ = run()                       # zero-fault reference
-    plan = FaultPlan(seed=7, rates={SITE_TRANSFER_WIRE: 0.05},
+    # wire rate high enough that the small run draws real retries (the
+    # retry-reconciliation assert below needs a nonzero ledger)
+    plan = FaultPlan(seed=7, rates={SITE_TRANSFER_WIRE: 0.3},
                      armed=[ArmedFault(SITE_DECODE_CRASH, key=(0, 3))])
-    ft, got, done = run(faults=plan)
+    tracer = Tracer(enabled=True)
+    ft, got, done = run(faults=plan, tracer=tracer)
     assert not ft.report.lost, "FT cluster must lose nothing"
     assert len(done) == len(ref), "FT cluster must complete 100%"
     assert ft.report.instance_crashes == 1
@@ -75,6 +80,20 @@ def bench_faults() -> List[str]:
             "recovery must keep greedy outputs bit-identical"
     for i in ft.live_decode_indices():
         ft.decode_engines[i].assert_no_page_leaks()
+
+    # ---- per-request latency attribution (telemetry invariants) ----
+    # every chaos-run request decomposes into queue/compute/transfer/
+    # swap/retry on one accounting clock, the components sum to the e2e
+    # measurement, and the retry component reconciles exactly with the
+    # registry's retry-time counter (both ledgers see the same charges)
+    tracer.assert_balanced()
+    ft.acc.assert_all_closed()
+    ft.acc.check_all(tol=0.01)
+    att = ft.attribution()
+    retry_comp = ft.acc.component_total("retry")
+    assert abs(retry_comp - ft.report.retry_time_total) <= 1e-9, (
+        f"retry component {retry_comp} != "
+        f"retry_time_total {ft.report.retry_time_total}")
 
     off, _, off_done = run(faults=plan, recovery=False)
     assert off.report.lost, "recovery-off baseline must lose requests"
@@ -88,6 +107,12 @@ def bench_faults() -> List[str]:
         "bit_identical": True, "ft_lost": 0,
         "recovery_off_lost": len(off.report.lost),
     }
+    snap["attribution"] = att
+    snap["telemetry"] = ft.metrics.snapshot()
+    rows.append(
+        f"cluster_attribution,sum_eq_e2e,"
+        f"retry_{round(retry_comp * 1e3, 2)}ms=="
+        f"retry_time_total_{round(ft.report.retry_time_total * 1e3, 2)}ms")
     rows.append(
         f"cluster_crash_reroute,bit_identical,"
         f"{ft.report.instance_crashes}_crash_{ft.report.reroutes}_"
@@ -120,6 +145,7 @@ def bench_faults() -> List[str]:
             "p99_ttft_inflation": round(infl, 3),
             "ft_transfer_retries": ft.transfer_retries,
             "ft_retry_time_ms": round(ft.retry_time_ms, 2),
+            "ft_mean_components_ms": ft.attribution["mean_components_ms"],
             "ft_lost": ft.lost_requests,
             "off_lost": off.lost_requests,
         })

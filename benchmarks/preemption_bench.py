@@ -65,6 +65,10 @@ def bench_preemption() -> List[str]:
             f"_completed,kills_{kill.killed_requests}->0_"
             f"preempts_{pre.n_preemptions}_p99tpot_"
             f"{kill.p99_tpot_ms:.0f}->{pre.p99_tpot_ms:.0f}ms")
+    # metrics-registry snapshot of the last preemption run: preemption
+    # counters + mean per-request latency attribution
+    snap["telemetry"] = pre.telemetry
+    snap["mean_components_ms"] = pre.attribution["mean_components_ms"]
 
     # REAL-engine spot check: forced preempt/resume keeps greedy parity
     # and the audit finds no leaked pages or dangling swap handles

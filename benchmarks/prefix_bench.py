@@ -96,6 +96,9 @@ def bench_prefix_cache() -> List[str]:
         f"leak: {pfx_eng.pool.n_used} used != {retained} retained"
     assert base_eng.pool.n_used == 0
     snap["leaked_pages"] = pfx_eng.pool.n_used - retained
+    # unified metrics registry of the prefix-cache engine (hit-rate
+    # gauge, prefill token counters) — the common bench telemetry key
+    snap["telemetry"] = pfx_eng.metrics.snapshot()
 
     rows.append(f"hit_rate,{stats.hit_rate:.3f},"
                 f"{stats.hits}/{stats.lookups}_lookups")

@@ -13,7 +13,15 @@ def main() -> None:
                                          bench_paged_kv)
     from benchmarks.paper_tables import ALL_BENCHMARKS
 
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    argv = list(sys.argv[1:])
+    trace_path = None
+    if "--trace" in argv:
+        i = argv.index("--trace")
+        if i + 1 >= len(argv):
+            raise SystemExit("usage: run.py [only] [--trace out.json]")
+        trace_path = argv[i + 1]
+        del argv[i:i + 2]
+    only = argv[0] if argv else None
     for fn in ALL_BENCHMARKS + EXTENSION_BENCHMARKS:
         if only and only not in fn.__name__:
             continue
@@ -44,6 +52,12 @@ def main() -> None:
     if only is None or "fault" in only:
         from benchmarks.fault_bench import bench_faults
         for row in bench_faults():
+            print(row)
+    # --trace forces the traced observability workload so there is
+    # always a Perfetto trace to export, whatever the filter says
+    if only is None or "observ" in only or trace_path:
+        from benchmarks.observability_bench import bench_observability
+        for row in bench_observability(trace_path=trace_path):
             print(row)
     print(f"# total {time.time() - t_start:.1f}s")
 

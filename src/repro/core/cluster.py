@@ -22,6 +22,7 @@ queues, mirroring the paper's logical-isolation/physical-co-location.
 from __future__ import annotations
 
 import hashlib
+import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -32,11 +33,14 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.costmodel import CostModel, Hardware, V5E
 from repro.core.faults import (DEFAULT_RETRY, NO_RETRY, SITE_DECODE_CRASH,
-                               FaultInjector, FaultPlan, InstanceDown,
-                               RetryPolicy, TransferError)
-from repro.core.kv_transfer import (TransferPlan, plan as kv_plan,
+                               SITE_STORE_FETCH, FaultInjector, FaultPlan,
+                               InstanceDown, RetryPolicy, TransferError)
+from repro.core.kv_transfer import (TransferPlan, emit_spans,
+                                    plan as kv_plan,
                                     plan_chunked as kv_plan_chunked)
 from repro.core.mm_store import MMStore
+from repro.core.telemetry import (NULL_TRACER, LatencyAccountant,
+                                  MetricsRegistry, Tracer)
 from repro.models import frontend as FE
 from repro.serving.engine import Engine
 from repro.serving.kv_pool import PoolExhausted
@@ -56,17 +60,36 @@ class ClusterReport:
     preemptions: int = 0
     swapped_pages: int = 0           # host-link pages moved (out + in)
     admission_denials: int = 0       # inserts denied by the decode pool
-    # fault recovery (chaos layer): modeled retry time charged against
-    # latency accounting, per-arm counters, and every request the
-    # cluster gave up on — losses are surfaced, never silent.
-    retry_time_total: float = 0.0
-    store_retries: int = 0
-    transfer_retries: int = 0
-    transfer_replans: int = 0
+    # fault recovery (chaos layer): per-arm counters and every request
+    # the cluster gave up on — losses are surfaced, never silent. The
+    # retry counters/time live in the cluster-wide metrics registry
+    # (labeled by site); the historical names read through below.
     instance_crashes: int = 0
     reroutes: int = 0
     swap_losses: int = 0
     lost: List[Request] = field(default_factory=list)
+    metrics: MetricsRegistry = field(default_factory=MetricsRegistry)
+
+    # -- registry read-through (historical counter names) --------------------
+    @property
+    def retry_time_total(self) -> float:
+        """Modeled retry/backoff seconds charged into latency accounting,
+        across every recovery site (store fetch + transfer)."""
+        return self.metrics.total("retry_time_seconds_total")
+
+    @property
+    def store_retries(self) -> int:
+        return int(self.metrics.value("recovery_retries_total",
+                                      site=SITE_STORE_FETCH))
+
+    @property
+    def transfer_retries(self) -> int:
+        return int(self.metrics.value("recovery_retries_total",
+                                      site="transfer"))
+
+    @property
+    def transfer_replans(self) -> int:
+        return int(self.metrics.value("transfer_replans_total"))
 
     @property
     def mean_kv_overlap(self) -> float:
@@ -89,14 +112,29 @@ class EPDCluster:
                  n_decode: int = 1,
                  faults: Optional[FaultPlan] = None,
                  retry: Optional[RetryPolicy] = None,
-                 recovery: bool = True):
+                 recovery: bool = True,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.cfg = cfg
+        # telemetry plane: one metrics registry + one span tracer + one
+        # latency accountant for the whole cluster. The accountant's
+        # clock is wall time (sync at every state transition) PLUS
+        # modeled charges (transfer exposure, retry backoff) — the same
+        # virtual timebase retry_time accounting already used; the
+        # tracer is re-clocked onto it so wall spans and modeled
+        # transfer spans share one timeline.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.acc = LatencyAccountant(wall=time.perf_counter)
+        if tracer is not None:
+            tracer.set_clock(self.acc.clock)
+        self._queue_since: Dict[int, float] = {}
         # one fault plane across every failure domain: store fetches,
         # transfer groups, decode instances, and the swap tier all draw
         # from the same seeded injector. faults=None keeps the zero-fault
         # fast paths byte-identical to the pre-chaos cluster.
         self.faults = faults
-        self.injector = FaultInjector(faults)
+        self.injector = FaultInjector(faults, metrics=self.metrics)
         if retry is not None:
             self.retry = retry
         else:
@@ -122,7 +160,10 @@ class EPDCluster:
                                      prefix_cache=prefix_cache,
                                      n_pool_pages=n_prefill_pool_pages,
                                      chunked_prefill=chunked_prefill,
-                                     prefill_chunk=prefill_chunk)
+                                     prefill_chunk=prefill_chunk,
+                                     name="P0", tracer=self.tracer,
+                                     metrics=self.metrics,
+                                     accountant=self.acc)
         # Decode instances: preemption=True turns decode-side pool
         # pressure into page-level swap-to-host + resume instead of a
         # pool error; n_decode_pool_pages sizes the pool below
@@ -134,10 +175,12 @@ class EPDCluster:
             Engine(cfg, params, max_batch=max_batch, max_len=max_len,
                    paged=paged, page_size=page_size,
                    n_pool_pages=n_decode_pool_pages,
-                   preemption=preemption, faults=self.injector)
-            for _ in range(n_decode)]
+                   preemption=preemption, faults=self.injector,
+                   name=f"D{i}", tracer=self.tracer,
+                   metrics=self.metrics, accountant=self.acc)
+            for i in range(n_decode)]
         self.dead: set = set()           # indices of crashed instances
-        self.report = ClusterReport()
+        self.report = ClusterReport(metrics=self.metrics)
         self._pending: List[Request] = []
         # crash-harvested requests waiting for re-admission: (request,
         # the decode-input token the resumed slot must feed next)
@@ -168,21 +211,46 @@ class EPDCluster:
                 best, best_free = self.decode_engines[i], free
         return best
 
+    # ---- latency attribution / queue-span helpers ----
+    def _park_queued(self, req: Request) -> None:
+        """A request (re-)enters a wait queue: accountant state goes to
+        ``queue`` and the wait start is remembered for the queue span."""
+        self.acc.set_state(req.request_id, "queue")
+        if self.tracer.enabled:
+            self._queue_since.setdefault(req.request_id, self.acc.clock())
+
+    def _unpark_queued(self, req: Request) -> None:
+        """A queued request starts service: close its queue-wait span
+        and move its accountant state to ``compute``."""
+        self.acc.set_state(req.request_id, "compute")
+        t0 = self._queue_since.pop(req.request_id, None)
+        if t0 is not None and self.tracer.enabled:
+            self.tracer.add("queue.wait", t0, self.acc.clock(),
+                            track="router", request_id=req.request_id)
+
+    def attribution(self) -> Dict[str, Any]:
+        """Per-request TTFT/TPOT attribution report (see
+        ``telemetry.LatencyAccountant.report``)."""
+        self.acc.sync()
+        return self.acc.report()
+
     # ---- Encode stage ----
     def encode(self, req: Request) -> Optional[str]:
         if not req.is_multimodal:
             return None
-        key = hashlib.sha256(req.mm_payload).hexdigest()
-        if not self.store.contains(key):
-            self.store.stats.misses += 1
-            feats = FE.stub_embeddings(self.cfg, req.mm_payload,
-                                       req.mm_tokens or None)
-            self.store.put(key, np.asarray(feats), feats.size * 4)
-        else:
-            # dedup: skip Encode entirely (cross-request reuse, §3.2);
-            # contains() doesn't consume injected faults — those hit the
-            # Prefill-side fetch, exercising the recompute path.
-            self.store.stats.hits += 1
+        with self.tracer.span("encode", track="E0",
+                              request_id=req.request_id):
+            key = hashlib.sha256(req.mm_payload).hexdigest()
+            if not self.store.contains(key):
+                self.store.stats.misses += 1
+                feats = FE.stub_embeddings(self.cfg, req.mm_payload,
+                                           req.mm_tokens or None)
+                self.store.put(key, np.asarray(feats), feats.size * 4)
+            else:
+                # dedup: skip Encode entirely (cross-request reuse, §3.2);
+                # contains() doesn't consume injected faults — those hit
+                # the Prefill-side fetch, exercising the recompute path.
+                self.store.stats.hits += 1
         return key
 
     # ---- Prefill stage (with FT retry + recompute on store miss) ----
@@ -199,8 +267,20 @@ class EPDCluster:
             attempt = 1
             while feats is None and attempt < self.retry.max_attempts:
                 back = self.retry.backoff(attempt, key=key)
-                self.report.retry_time_total += back
-                self.report.store_retries += 1
+                self.metrics.counter("retry_time_seconds_total",
+                                     site=SITE_STORE_FETCH).inc(back)
+                self.metrics.counter("recovery_retries_total",
+                                     site=SITE_STORE_FETCH).inc()
+                # backoff is modeled time: charge it to the request's
+                # retry component and render it on the store track
+                self.acc.sync()
+                t0 = self.acc.now
+                self.acc.advance(back, req.request_id, "retry")
+                if self.tracer.enabled:
+                    self.tracer.add("retry.store", t0, self.acc.now,
+                                    track="store",
+                                    request_id=req.request_id,
+                                    attempt=attempt)
                 feats = self.store.get(key, record=False, attempt=attempt)
                 attempt += 1
             if feats is None:
@@ -254,18 +334,42 @@ class EPDCluster:
         # re-handshake/resend with backoff, exhausted groups replan
         # fresh; the retry time lands in retry_time_total (latency
         # accounting) and the *recovered* plan is what gets recorded.
+        rec = None
         if self.faults is not None:
             p, rec = self.cost.recover_transfer(
                 p, self.injector,
                 self.retry if self.recovery else NO_RETRY,
                 key=req.request_id, replan=self.recovery)
-            self.report.transfer_retries += rec.retries
-            self.report.transfer_replans += rec.replanned_groups
-            self.report.retry_time_total += rec.retry_time
+            self.metrics.counter("recovery_retries_total",
+                                 site="transfer").inc(rec.retries)
+            self.metrics.counter("transfer_replans_total").inc(
+                rec.replanned_groups)
+            self.metrics.counter("retry_time_seconds_total",
+                                 site="transfer").inc(rec.retry_time)
+        engine = self._pick_decode() or self.decode_engine
+        # The exposed transfer latency (and any retry backoff folded
+        # into it by recovery) is modeled time — the real arrays move
+        # in-process. Charge it on the accounting clock: retry time to
+        # the retry component, the remaining exposure to transfer. The
+        # modeled group schedule is anchored so its prefill_end lands
+        # at the current accounting now (the real prefill just ended on
+        # the wall clock).
+        self.acc.sync()
+        base = self.acc.now - p.prefill_end
+        retry_t = rec.retry_time if rec is not None else 0.0
+        exposed = max(0.0, p.exposed_latency - retry_t)
+        self.acc.advance(retry_t, req.request_id, "retry")
+        self.acc.advance(exposed, req.request_id, "transfer")
+        emit_spans(self.tracer, p, base=base,
+                   handshake=self.cost.hw.handshake,
+                   compute_track=self.prefill_engine.name,
+                   link_track=f"{self.prefill_engine.name}->{engine.name}",
+                   request_id=req.request_id, recovery=rec)
         # insert may preempt a decode victim to make room; only a
         # successful admission records the transfer plan
-        engine = self._pick_decode() or self.decode_engine
         engine.insert(req, caches, first, append_token=append_token)
+        self.acc.mark_first_token(req.request_id)
+        self.acc.set_state(req.request_id, "compute")
         self.report.kv_plans.append(p)
 
     # ---- full pipeline ----
@@ -278,9 +382,12 @@ class EPDCluster:
         transfer is unrecoverable (retry + replan exhausted, or any
         fault with recovery off) is killed and surfaced in
         ``report.lost`` — never silently dropped."""
+        self.acc.open(req.request_id)
         if self._pick_decode() is None:
+            self._park_queued(req)
             self._pending.append(req)
             return True
+        self._unpark_queued(req)
         key = self.encode(req)
         first, caches = self.prefill(req, key)
         try:
@@ -290,6 +397,7 @@ class EPDCluster:
             if self.paged:
                 self.prefill_engine.release_payload(caches)
             self.report.admission_denials += 1
+            self._park_queued(req)
             self._pending.insert(0, req)
             return False
         except TransferError:
@@ -297,6 +405,7 @@ class EPDCluster:
                 self.prefill_engine.release_payload(caches)
             req.killed = True
             self.report.lost.append(req)
+            self.acc.close(req.request_id)
         return True
 
     # ---- decode-instance crash + cross-instance re-route ----
@@ -324,12 +433,20 @@ class EPDCluster:
         inflight += [pr.req for pr in eng.preempted]
         self.dead.add(i)
         self.report.instance_crashes += 1
+        self.metrics.counter("instance_crashes_total",
+                             engine=eng.name).inc()
+        if self.tracer.enabled:
+            t = self.acc.clock()
+            self.tracer.add("crash", t, t, track=eng.name,
+                            harvested=len(inflight))
         for req in inflight:
             if self.recovery:
+                self._park_queued(req)
                 self._reroute_queue.append(req)
             else:
                 req.killed = True
                 self.report.lost.append(req)
+                self.acc.close(req.request_id)
 
     def _reroute_one(self, req: Request) -> bool:
         """Re-route one crash-harvested request to a surviving instance.
@@ -346,6 +463,10 @@ class EPDCluster:
         shadow = Request(prompt_tokens=seq, max_new_tokens=1,
                          mm_payload=req.mm_payload,
                          mm_tokens=req.mm_tokens, priority=req.priority)
+        # the shadow prefill's charges (store retries, transfer
+        # exposure) bill the original request's ledger entry
+        self.acc.alias(shadow.request_id, req.request_id)
+        self._unpark_queued(req)
         key = self.encode(shadow)
         first, caches = self.prefill(shadow, key)
         try:
@@ -356,6 +477,7 @@ class EPDCluster:
             if self.paged:
                 self.prefill_engine.release_payload(caches)
             self.report.admission_denials += 1
+            self._park_queued(req)
             self._reroute_queue.insert(0, req)
             return False
         except TransferError:
@@ -363,6 +485,7 @@ class EPDCluster:
                 self.prefill_engine.release_payload(caches)
             req.killed = True
             self.report.lost.append(req)
+            self.acc.close(req.request_id)
             return True
         self.report.reroutes += 1
         return True
@@ -384,9 +507,30 @@ class EPDCluster:
                     for r, _t, d in eng.decode_step():
                         if d:
                             done.append(r)
+                            self.acc.close(r.request_id,
+                                           n_output_tokens=len(
+                                               r.output_tokens))
                 # swap-loss casualties (no recompute arm available)
                 while eng.lost:
-                    self.report.lost.append(eng.lost.pop(0))
+                    lost = eng.lost.pop(0)
+                    self.report.lost.append(lost)
+                    self.acc.close(lost.request_id)
+            # reconcile ledger states with where each request actually
+            # is after the step (preemption may have parked a request:
+            # parked time is queueing; resumed requests compute again),
+            # then fold in the engines' measured swap durations — the
+            # notes reclassify already-charged time, so they drain only
+            # after the sync inside set_state has charged it.
+            for eng in live():
+                for pr in eng.preempted:
+                    self.acc.set_state(pr.req.request_id, "queue")
+                for r in eng.slots:
+                    if r is not None:
+                        self.acc.set_state(r.request_id, "compute")
+            self.acc.sync()
+            for eng in self.decode_engines:
+                eng.drain_notes()
+            self.prefill_engine.drain_notes()
             while self._reroute_queue and self._pick_decode() is not None:
                 if not self._reroute_one(self._reroute_queue.pop(0)):
                     break                  # denied: wait for drain
@@ -394,6 +538,10 @@ class EPDCluster:
                 if not self.submit(self._pending.pop(0)):
                     break                  # denied: wait for decode to drain
             steps += 1
+        self.acc.sync()
+        for eng in self.decode_engines:
+            eng.drain_notes()
+        self.prefill_engine.drain_notes()
         self.report.completed.extend(done)
         self.report.preemptions = sum(e.preempt_count
                                       for e in self.decode_engines)

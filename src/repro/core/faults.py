@@ -244,11 +244,23 @@ class FaultInjector:
     faults can heal under retry, which is what the backoff arms exploit.
     """
 
-    def __init__(self, plan: Optional[FaultPlan] = None):
+    def __init__(self, plan: Optional[FaultPlan] = None, metrics=None):
         self.plan = (plan or FaultPlan()).validate()
         self._armed: List[ArmedFault] = [replace(a) for a in self.plan.armed]
         self._rate_fired: Dict[str, int] = {}
         self.stats = FaultStats()
+        # optional telemetry registry (core.telemetry.MetricsRegistry):
+        # mirrors FaultStats into labeled counters so chaos runs show up
+        # in the unified metrics snapshot. Duck-typed to avoid an import
+        # cycle (telemetry must stay dependency-free).
+        self.metrics = metrics
+
+    def _record(self, site: str, fired: bool) -> None:
+        self.stats.record(site, fired)
+        if self.metrics is not None:
+            self.metrics.counter("fault_checks_total", site=site).inc()
+            if fired:
+                self.metrics.counter("faults_fired_total", site=site).inc()
 
     # -- arming (the MMStore.inject_fault generalization) --------------------
     def arm(self, site: str, key: Any = None, count: int = 1) -> None:
@@ -275,7 +287,7 @@ class FaultInjector:
                 a.count -= 1
                 if a.count <= 0:
                     self._armed.remove(a)
-                self.stats.record(site, True)
+                self._record(site, True)
                 return True
         rate = self.plan.rates.get(site, 0.0)
         if rate > 0.0:
@@ -284,9 +296,9 @@ class FaultInjector:
                 if _unit(self.plan.seed, site, key, attempt) < rate:
                     self._rate_fired[site] = \
                         self._rate_fired.get(site, 0) + 1
-                    self.stats.record(site, True)
+                    self._record(site, True)
                     return True
-        self.stats.record(site, False)
+        self._record(site, False)
         return False
 
     def n_fired(self, site: Optional[str] = None) -> int:

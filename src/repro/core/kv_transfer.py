@@ -291,6 +291,10 @@ class TransferRecovery:
     retry_time: float = 0.0       # backoff + wasted handshake/wire time
     replanned_groups: int = 0     # groups delivered via the fresh replan
     deadline_hits: int = 0        # groups whose retry budget ran out
+    # link-time event log for the span tracer: (kind, group_start,
+    # t_begin, t_end) — wasted attempts and backoff idles, in the same
+    # relative timebase as the recovered plan's group schedule.
+    events: List[Tuple[str, int, float, float]] = field(default_factory=list)
 
     @property
     def faults(self) -> int:
@@ -326,6 +330,7 @@ def _attempt_group(g: GroupPlan, clock: float, *, injector: FaultInjector,
             rec.handshake_faults += 1
         else:
             rec.wire_faults += 1
+        rec.events.append(("kv.retry.wasted", g.start, t, t + wasted))
         t += wasted
         retry_spent += wasted
         rec.retry_time += wasted
@@ -334,6 +339,7 @@ def _attempt_group(g: GroupPlan, clock: float, *, injector: FaultInjector,
                 rec.deadline_hits += 1
                 return None, t, retry_spent
             back = policy.backoff(a, key=(key, tag, g.start))
+            rec.events.append(("kv.retry.backoff", g.start, t, t + back))
             t += back
             retry_spent += back
             rec.retry_time += back
@@ -411,3 +417,49 @@ def recover_plan(plan: TransferPlan, *, injector: FaultInjector,
     out = TransferPlan(plan.scheme, delivered, plan.prefill_time,
                        plan.prefill_end, kv_latency, exposed, eff_bw)
     return out, rec
+
+
+# ---------------------------------------------------------------------------
+# Telemetry: render a transfer schedule as trace spans
+# ---------------------------------------------------------------------------
+
+def emit_spans(tracer, plan: TransferPlan, *, base: float, handshake: float,
+               compute_track: str, link_track: str,
+               chunk_compute: Optional[List[float]] = None,
+               request_id: Optional[int] = None,
+               recovery: Optional[TransferRecovery] = None) -> None:
+    """Record a plan's modeled timeline as tracer spans.
+
+    The plan's group schedule is relative to its own t=0 (prefill
+    start); ``base`` anchors it on the tracer's clock. Each group gets a
+    ``kv.handshake`` span ([t_send - handshake, t_send]) and a
+    ``kv.wire`` span ([t_send, t_done]) on ``link_track``, so the
+    chunk-k transfer visibly rides under chunk-k+1 compute in the
+    exported trace. ``chunk_compute`` (per-segment compute durations)
+    additionally renders the modeled compute stream on
+    ``compute_track`` — used when the compute itself is modeled (cost
+    model / simulator); the real engine's chunk spans come from its own
+    wall clock instead. ``recovery`` adds the retry events (wasted
+    attempts, backoff idles) as ``kv.retry.*`` spans on the link track,
+    making fault-recovery time visible as explicit timeline gaps."""
+    if not tracer.enabled:
+        return
+    if chunk_compute is not None:
+        t = base
+        for k, dt in enumerate(chunk_compute):
+            if dt > 0:
+                tracer.add("prefill.chunk", t, t + dt, track=compute_track,
+                           request_id=request_id, chunk=k, modeled=True)
+            t += dt
+    for g in plan.groups:
+        if handshake > 0:
+            tracer.add("kv.handshake", base + g.t_send - handshake,
+                       base + g.t_send, track=link_track,
+                       request_id=request_id, group=g.start)
+        tracer.add("kv.wire", base + g.t_send, base + g.t_done,
+                   track=link_track, request_id=request_id,
+                   group=g.start, nbytes=g.nbytes)
+    if recovery is not None:
+        for kind, grp, t0, t1 in recovery.events:
+            tracer.add(kind, base + t0, base + t1, track=link_track,
+                       request_id=request_id, group=grp)

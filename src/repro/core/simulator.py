@@ -38,8 +38,10 @@ from repro.core.ep_prefetch import EPPrefetcher
 from repro.core.faults import (DEFAULT_RETRY, NO_RETRY, FaultInjector,
                                FaultPlan, RetryPolicy, TransferError)
 from repro.core.events import EventLoop
-from repro.core.kv_transfer import (plan as kv_plan,
+from repro.core.kv_transfer import (emit_spans, plan as kv_plan,
                                     plan_chunked as kv_plan_chunked)
+from repro.core.telemetry import (NULL_TRACER, LatencyAccountant,
+                                  MetricsRegistry, Tracer, quantile)
 from repro.core.mm_store import MMStore
 from repro.core.scheduler import (Router, VictimCandidate,
                                   pick_preemption_victim)
@@ -153,6 +155,11 @@ class SimConfig:
     faults: Optional[FaultPlan] = None
     retry: Optional[RetryPolicy] = None
     fault_recovery: bool = True
+    # observability plane (core.telemetry): pass a Tracer to get spans
+    # on simulated time, a MetricsRegistry to share counters across
+    # runs. None keeps the hot paths allocation-free (NULL_TRACER).
+    tracer: Optional[Tracer] = None
+    metrics: Optional[MetricsRegistry] = None
 
 
 @dataclass
@@ -176,6 +183,10 @@ class SimMetrics:
     lost_requests: int = 0             # unrecoverable transfer losses
     transfer_retries: int = 0          # failed group attempts retried
     retry_time_ms: float = 0.0         # modeled backoff + resend time
+    # observability: per-request latency attribution (components sum to
+    # e2e on simulated time) + the metrics-registry snapshot
+    attribution: Optional[Dict] = None
+    telemetry: Optional[Dict] = None
 
     def slo_attainment(self, ttft_ms: float, tpot_ms: float) -> float:
         ok = sum(r.meets_slo(ttft_ms, tpot_ms) for r in self.requests)
@@ -211,6 +222,8 @@ class _Instance:
         self.preempted: List[Tuple[Request, int]] = []
         self._resume_marks: Dict[int, int] = {}
         self._swap_penalty = 0.0      # host-link time owed by the next iter
+        self._parked_at: Dict[int, float] = {}   # rid -> preempt time (spans)
+        self._decode_iters = 0                   # decode-span sampling
         self.busy = False
         self.running_stage: Optional[str] = None
 
@@ -246,12 +259,16 @@ class _Instance:
             req.killed = True
             req.t_done = self.sim.loop.now
             self.sim.n_killed += 1
+            self.sim.metrics.counter("killed_requests_total").inc()
             self.sim.done.append(req)
+            self.sim.acc.close(req.request_id, len(req.output_tokens))
             return
         if not self._can_admit(req):
+            self.sim.acc.set_state(req.request_id, "queue")
             self.decode_wait.append(req)
             return
         self.decode_batch[req.request_id] = (req, req.max_new_tokens - 1)
+        self.sim.acc.set_state(req.request_id, "compute")
         self.sim.router.on_decode_join(self.spec.name)
         self._kick()
 
@@ -282,6 +299,11 @@ class _Instance:
                                            self.spec.tp)
                 dur *= self._interference("E")
                 req.t_encode_start = loop.now
+                sim.acc.set_state(req.request_id, "compute")
+                if sim.tracer.enabled:
+                    sim.tracer.add("encode", loop.now, loop.now + dur,
+                                   track=self.spec.name,
+                                   request_id=req.request_id)
                 loop.after(dur, lambda: self._finish_encode(req))
             else:
                 cached = self._prefix_lookup(req)
@@ -325,6 +347,10 @@ class _Instance:
             # the decode stream (pages are unusable until the copy lands)
             dur += self._swap_penalty
             self._swap_penalty = 0.0
+            self._decode_iters += 1
+            if sim.tracer.want_decode_span(self._decode_iters):
+                sim.tracer.add("decode.step", loop.now, loop.now + dur,
+                               track=self.spec.name, batch=batch)
             loop.after(dur, self._finish_decode_iter)
             sim.router.on_busy_until(self.spec.name, loop.now + dur)
         else:
@@ -382,6 +408,20 @@ class _Instance:
     def _start_prefill(self, req: Request, base_dur: float, cached: float,
                        chunked: Optional[tuple]) -> None:
         sim = self.sim
+        sim.acc.set_state(req.request_id, "compute")
+        if sim.tracer.enabled:
+            if chunked is not None:
+                t = sim.loop.now
+                for k, dt in enumerate(chunked[1]):
+                    sim.tracer.add("prefill.chunk", t, t + dt,
+                                   track=self.spec.name,
+                                   request_id=req.request_id, chunk=k)
+                    t += dt
+            else:
+                sim.tracer.add("prefill", sim.loop.now,
+                               sim.loop.now + base_dur,
+                               track=self.spec.name,
+                               request_id=req.request_id)
         d_inst = sim.pick_decode_instance(req, prefer=self.spec.name)
         if d_inst is self:
             # fused PD: no transfer
@@ -414,6 +454,7 @@ class _Instance:
                         handshake=sim.cfg.hw.handshake,
                         link_bw=sim.cfg.hw.link_bw,
                         page_bytes=sim.cost.kv_page_bytes_per_layer())
+        rec = None
         if sim.cfg.faults is not None:
             # deliver the plan through the fault plane: retry/backoff +
             # fresh replan of missing groups. TTFT inflation flows
@@ -427,16 +468,30 @@ class _Instance:
                     key=req.request_id, replan=sim.cfg.fault_recovery)
                 sim.n_transfer_retries += rec.retries
                 sim.transfer_retry_time += rec.retry_time
+                sim.metrics.counter("recovery_retries_total",
+                                    site="transfer").inc(rec.retries)
+                sim.metrics.counter("transfer_replans_total").inc(
+                    rec.replanned_groups)
+                sim.metrics.counter("retry_time_seconds_total",
+                                    site="transfer").inc(rec.retry_time)
             except TransferError:
                 req.killed = True
                 sim.n_lost += 1
+                sim.metrics.counter("lost_requests_total").inc()
+        emit_spans(sim.tracer, p, base=sim.loop.now,
+                   handshake=sim.cfg.hw.handshake,
+                   compute_track=self.spec.name,
+                   link_track=f"{self.spec.name}->{d_inst.spec.name}",
+                   request_id=req.request_id, recovery=rec)
         sim.kv_plans.append(p)
+        retry_t = rec.retry_time if rec is not None else 0.0
         # layer-wise blocking handshakes stretch prefill itself
         sim.loop.after(p.prefill_end, lambda: self._finish_prefill(
-            req, d_inst, join_delay=max(0.0, p.total_done - p.prefill_end)))
+            req, d_inst, join_delay=max(0.0, p.total_done - p.prefill_end),
+            retry_t=retry_t))
 
     def _finish_prefill(self, req: Request, d_inst: "_Instance",
-                        join_delay: float) -> None:
+                        join_delay: float, retry_t: float = 0.0) -> None:
         sim = self.sim
 
         def emit() -> None:
@@ -445,20 +500,29 @@ class _Instance:
                 # account and retire without a first token
                 req.t_done = sim.loop.now
                 sim.done.append(req)
+                sim.acc.close(req.request_id)
                 return
+            # the exposed transfer tail the request just sat through
+            # includes the recovery backoff: reclassify that slice of
+            # the transfer component as retry (zero-sum, clamped)
+            sim.acc.note(req.request_id, "retry", retry_t,
+                         source="transfer")
             # first token gated on the Decode side holding the full KV
             # (kv_transfer's "TTFT gate"): the exposed transfer tail sits
             # on the TTFT critical path, which is what the grouped /
             # chunked streaming schemes shrink
             req.t_first_token = sim.loop.now
+            sim.acc.mark_first_token(req.request_id)
             req.output_tokens.append(0)
             if req.max_new_tokens <= 1:
                 req.t_done = sim.loop.now
                 sim.done.append(req)
+                sim.acc.close(req.request_id, len(req.output_tokens))
             else:
                 d_inst.join_decode(req)
 
         if join_delay > 0:
+            sim.acc.set_state(req.request_id, "transfer")
             sim.loop.after(join_delay, emit)
         else:
             emit()
@@ -483,7 +547,12 @@ class _Instance:
         self.sim.router.on_decode_leave(self.spec.name)
         req.n_preempts += 1
         self.sim.n_preempted += 1
+        self.sim.metrics.counter("preemptions_total",
+                                 engine=self.spec.name).inc()
         self._swap_penalty += self.sim.cost.swap_time(self._held_pages(req))
+        self.sim.acc.set_state(rid, "queue")
+        if self.sim.tracer.enabled:
+            self._parked_at[rid] = self.sim.loop.now
         self.preempted.append((req, remaining))
 
     def _kill(self, rid: int) -> None:
@@ -492,7 +561,9 @@ class _Instance:
         req.killed = True
         req.t_done = self.sim.loop.now
         self.sim.n_killed += 1
+        self.sim.metrics.counter("killed_requests_total").inc()
         self.sim.done.append(req)
+        self.sim.acc.close(rid, len(req.output_tokens))
 
     def _finish_decode_iter(self) -> None:
         sim = self.sim
@@ -504,6 +575,7 @@ class _Instance:
                 req.t_done = sim.loop.now
                 finished.append(rid)
                 sim.done.append(req)
+                sim.acc.close(rid, len(req.output_tokens))
             else:
                 self.decode_batch[rid] = (req, remaining)
         for rid in finished:
@@ -530,8 +602,19 @@ class _Instance:
             if cap and self._pages_used() + self._held_pages(req) > cap:
                 break
             self.preempted.pop(0)
-            self._swap_penalty += sim.cost.swap_time(self._held_pages(req))
+            swap_t = sim.cost.swap_time(self._held_pages(req))
+            self._swap_penalty += swap_t
+            # the parked wait accrued as queue time; the out+in copies
+            # of its pages are really swap traffic — reclassify
+            sim.acc.note(req.request_id, "swap", 2 * swap_t,
+                         source="queue")
+            if sim.tracer.enabled:
+                t0 = self._parked_at.pop(req.request_id, sim.loop.now)
+                sim.tracer.add("preempt.parked", t0, sim.loop.now,
+                               track=self.spec.name,
+                               request_id=req.request_id)
             self.decode_batch[req.request_id] = (req, remaining)
+            sim.acc.set_state(req.request_id, "compute")
             self._resume_marks[req.request_id] = len(req.output_tokens)
             sim.router.on_decode_join(self.spec.name)
         while self.decode_wait and self._can_admit(self.decode_wait[0]):
@@ -555,11 +638,23 @@ class Simulator:
         self.cost = CostModel(model, cfg.hw, page_tokens=cfg.kv_page_tokens)
         self.loop = EventLoop()
         self.router = Router(self.deployment)
+        # telemetry plane: the accountant rides the event loop — every
+        # simulated-time advance is charged to all open requests under
+        # their current stage state, so the per-request components sum
+        # to e2e by construction. The tracer (when given) is re-clocked
+        # onto simulated time so spans land on the event-loop timeline.
+        self.metrics = cfg.metrics if cfg.metrics is not None \
+            else MetricsRegistry()
+        self.tracer = cfg.tracer if cfg.tracer is not None else NULL_TRACER
+        if cfg.tracer is not None:
+            cfg.tracer.set_clock(lambda: self.loop.now)
+        self.acc = LatencyAccountant()         # simulated time, no wall
+        self.loop.on_advance = self.acc.advance
         # one seeded fault plane across the store and transfer domains.
         # With a fault plan configured, recovery defaults to the standard
         # backoff policy; without one, NO_RETRY keeps the legacy
         # single-attempt semantics exactly.
-        self.injector = FaultInjector(cfg.faults)
+        self.injector = FaultInjector(cfg.faults, metrics=self.metrics)
         if cfg.retry is not None:
             self.retry = cfg.retry
         else:
@@ -598,6 +693,7 @@ class Simulator:
         self.loop.at(req.t_arrival, lambda: self._arrive(req))
 
     def _arrive(self, req: Request) -> None:
+        self.acc.open(req.request_id)
         if req.is_multimodal:
             import hashlib
             key = hashlib.sha256(req.mm_payload).hexdigest()
@@ -653,16 +749,15 @@ class Simulator:
         makespan = max(r.t_done for r in self.done) - min(
             r.t_arrival for r in self.done)
         toks = sum(len(r.output_tokens) for r in self.done)
-        q = lambda xs, p: xs[min(len(xs) - 1, int(p * len(xs)))]
         return SimMetrics(
             deployment=self.deployment.name,
             n_chips=self.deployment.n_chips,
             requests=list(self.done),
             makespan=makespan,
             mean_ttft_ms=sum(ttfts) / len(ttfts),
-            p99_ttft_ms=q(ttfts, 0.99),
+            p99_ttft_ms=quantile(ttfts, 0.99),
             mean_tpot_ms=sum(tpots) / len(tpots),
-            p99_tpot_ms=q(tpots, 0.99),
+            p99_tpot_ms=quantile(tpots, 0.99),
             throughput_tok_s=toks / makespan if makespan > 0 else 0.0,
             store_hit_rate=self.store.stats.hit_rate,
             ep_overlap_ratio=self.prefetcher.mean_overlap_ratio,
@@ -674,6 +769,8 @@ class Simulator:
             lost_requests=self.n_lost,
             transfer_retries=self.n_transfer_retries,
             retry_time_ms=self.transfer_retry_time * 1e3,
+            attribution=self.acc.report(),
+            telemetry=self.metrics.snapshot(),
         )
 
 
@@ -691,7 +788,9 @@ def simulate(model: ModelConfig, deployment: str, dataset: DatasetSpec,
              preemption: bool = False,
              faults: Optional[FaultPlan] = None,
              retry: Optional[RetryPolicy] = None,
-             fault_recovery: bool = True) -> SimMetrics:
+             fault_recovery: bool = True,
+             tracer: Optional[Tracer] = None,
+             metrics: Optional[MetricsRegistry] = None) -> SimMetrics:
     """Run one deployment against a trace injected at ``rate`` req/s.
 
     per_chip_rate=True multiplies the rate by the deployment's chip count
@@ -710,7 +809,8 @@ def simulate(model: ModelConfig, deployment: str, dataset: DatasetSpec,
                     decode_kv_pages=decode_kv_pages,
                     preemption=preemption,
                     faults=faults, retry=retry,
-                    fault_recovery=fault_recovery)
+                    fault_recovery=fault_recovery,
+                    tracer=tracer, metrics=metrics)
     sim = Simulator(model, cfg)
     if per_chip_rate:
         rate = rate * sim.deployment.n_chips

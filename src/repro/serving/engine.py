@@ -58,6 +58,7 @@ via ``insert`` and run ``decode_step``.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -68,6 +69,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.faults import FaultInjector, NoFreeSlot, SwapLost
 from repro.core.scheduler import VictimCandidate, pick_preemption_victim
+from repro.core.telemetry import (NULL_TRACER, LatencyAccountant,
+                                  MetricsRegistry, Tracer)
 from repro.models import frontend as FE
 from repro.models.transformer import make_caches
 from repro.serving.kv_pool import (PagePool, PagedKVPayload, PoolExhausted,
@@ -102,6 +105,7 @@ class PreemptedRequest:
     n_pages: int
     side: Dict[str, Any] = field(default_factory=dict)
     last_tok: int = 0
+    t_parked: float = 0.0             # tracer clock at park (parked span)
 
 
 class Engine:
@@ -113,9 +117,21 @@ class Engine:
                  prefix_cache: bool = False,
                  chunked_prefill: bool = False, prefill_chunk: int = 32,
                  preemption: bool = False,
-                 faults: Optional[FaultInjector] = None):
+                 faults: Optional[FaultInjector] = None,
+                 name: str = "engine",
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 accountant: Optional[LatencyAccountant] = None):
         self.cfg = cfg
         self.params = params
+        # telemetry plane: span tracer (no-op unless enabled), shared
+        # metrics registry (private one when standalone, so the counter
+        # properties below always have a backing store), and the
+        # cluster's latency accountant for swap-time reclassification.
+        self.name = name
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.accountant = accountant
         self.max_batch = max_batch
         self.max_len = max_len
         self.cache_dtype = cache_dtype
@@ -143,7 +159,8 @@ class Engine:
             if n_pool_pages is None:
                 # all slots full + one in-flight prefill, + trash page 0
                 n_pool_pages = 1 + (max_batch + 1) * per_slot
-            self.pool = PagePool(n_pool_pages, page_size, injector=faults)
+            self.pool = PagePool(n_pool_pages, page_size, injector=faults,
+                                 metrics=self.metrics, name=name)
             self.caches = make_caches(
                 cfg, max_batch, max_len, dtype=cache_dtype,
                 kv_dtype=kv_dtype, layout="paged", page_size=page_size,
@@ -185,29 +202,112 @@ class Engine:
         self.slots: List[Optional[Request]] = [None] * max_batch
         self._last_tok = np.zeros((max_batch,), np.int32)
         self._key = jax.random.PRNGKey(0)
+        # Counters live in the metrics registry, labeled by engine name;
+        # the historical attribute names (kv_insert_bytes_total,
+        # refault_pages_total, ...) survive as read-through properties
+        # below so existing tests/benchmarks read them unchanged.
+        M = self.metrics
         # KV bytes moved by the most recent / all insert() calls — the
         # paged-vs-dense P->D handoff metric (benchmarks, acceptance).
-        self.kv_insert_bytes = 0
-        self.kv_insert_bytes_total = 0
+        self._m_insert_bytes_last = M.gauge("kv_insert_bytes_last",
+                                            engine=name)
+        self._m_insert_bytes = M.counter("kv_insert_bytes_total",
+                                         engine=name)
         # prefill work accounting: tokens the model actually computed vs
         # tokens requested — the prefix-cache savings metric.
-        self.prefill_tokens_total = 0
-        self.prefill_tokens_computed = 0
+        self._m_prefill_total = M.counter("prefill_tokens_total",
+                                          engine=name)
+        self._m_prefill_computed = M.counter("prefill_tokens_computed",
+                                             engine=name)
+        self._m_prefix_hit_rate = M.gauge("prefix_hit_rate", engine=name)
         # page-level preemption state: requests parked off-device, FIFO
         # resume order; marks record output length at resume for the
         # starvation guard (no second preemption before progress).
         self.preempted: List[PreemptedRequest] = []
-        self.preempt_count = 0
-        self.resume_count = 0
-        self.swap_out_pages_total = 0
-        self.swap_in_pages_total = 0
-        self.refault_pages_total = 0      # prefix pages recomputed on resume
+        self._m_preempt = M.counter("preemptions_total", engine=name)
+        self._m_resume = M.counter("resumes_total", engine=name)
+        self._m_swap_out = M.counter("swap_out_pages_total", engine=name)
+        self._m_swap_in = M.counter("swap_in_pages_total", engine=name)
+        # prefix pages recomputed on resume
+        self._m_refault = M.counter("refault_pages_total", engine=name)
         self._resume_marks: Dict[int, int] = {}
         # swap-loss recovery: resumes that had to recompute their private
         # pages because the host swap tier lost the handle, and requests
         # that could not be recovered (no suffix step / multimodal).
-        self.swap_lost_recomputes = 0
+        self._m_swap_lost_rec = M.counter("swap_lost_recomputes_total",
+                                          engine=name)
+        self._m_lost = M.counter("lost_requests_total", engine=name)
         self.lost: List[Request] = []
+        # swap/refault work done inside engine calls, to be reclassified
+        # in the accountant's ledger by the cluster after its next
+        # sync() (the time is already charged under the request's state;
+        # note() moves it into the "swap" component, zero-sum).
+        self._pending_notes: List[Tuple[int, str, float, str]] = []
+        self._decode_steps = 0
+
+    # -- telemetry back-compat properties ------------------------------------
+    @property
+    def kv_insert_bytes(self) -> int:
+        return int(self._m_insert_bytes_last.value)
+
+    @property
+    def kv_insert_bytes_total(self) -> int:
+        return int(self._m_insert_bytes.value)
+
+    @property
+    def prefill_tokens_total(self) -> int:
+        return int(self._m_prefill_total.value)
+
+    @property
+    def prefill_tokens_computed(self) -> int:
+        return int(self._m_prefill_computed.value)
+
+    @property
+    def preempt_count(self) -> int:
+        return int(self._m_preempt.value)
+
+    @property
+    def resume_count(self) -> int:
+        return int(self._m_resume.value)
+
+    @property
+    def swap_out_pages_total(self) -> int:
+        return int(self._m_swap_out.value)
+
+    @property
+    def swap_in_pages_total(self) -> int:
+        return int(self._m_swap_in.value)
+
+    @property
+    def refault_pages_total(self) -> int:
+        return int(self._m_refault.value)
+
+    @property
+    def swap_lost_recomputes(self) -> int:
+        return int(self._m_swap_lost_rec.value)
+
+    def _count_prefill(self, n_total: int, n_computed: int) -> None:
+        self._m_prefill_total.inc(n_total)
+        self._m_prefill_computed.inc(n_computed)
+        if self.prefix_cache is not None and self._m_prefill_total.value:
+            self._m_prefix_hit_rate.set(
+                1.0 - self._m_prefill_computed.value
+                / self._m_prefill_total.value)
+
+    def _note(self, request_id: int, component: str, dur: float,
+              source: str) -> None:
+        if self.accountant is not None and dur > 0:
+            self._pending_notes.append((request_id, component, dur, source))
+
+    def drain_notes(self) -> None:
+        """Apply pending swap-time reclassifications to the accountant.
+        The cluster calls this right after its wall-clock sync, so the
+        source component has already been charged the interval the swap
+        work happened in (note() is zero-sum and clamped)."""
+        if self.accountant is not None:
+            for rid, comp, amt, src in self._pending_notes:
+                self.accountant.note(rid, comp, amt, src)
+        self._pending_notes.clear()
 
     # -- capacity ------------------------------------------------------------
     def free_slots(self) -> List[int]:
@@ -319,6 +419,7 @@ class Engine:
         if req is None:
             raise ValueError(f"slot {slot} is not active")
         pages = self._slot_pages[slot]
+        t0 = time.perf_counter()
         n_shared = 0
         if self.prefix_cache is not None:
             while (n_shared < len(pages)
@@ -326,13 +427,16 @@ class Engine:
                 n_shared += 1
         private = pages[n_shared:]
         handle = None
-        if len(private):
-            data = jax.device_get(self._gather_pages(
-                self.caches["attn"], jnp.asarray(private, jnp.int32)))
-            handle = self.pool.swap_out(private, data)
-            self.swap_out_pages_total += len(private)
-        if n_shared:
-            self.pool.unref(pages[:n_shared])
+        with self.tracer.span("preempt.swap_out", track=self.name,
+                              request_id=req.request_id,
+                              n_private=len(private), n_shared=n_shared):
+            if len(private):
+                data = jax.device_get(self._gather_pages(
+                    self.caches["attn"], jnp.asarray(private, jnp.int32)))
+                handle = self.pool.swap_out(private, data)
+                self._m_swap_out.inc(len(private))
+            if n_shared:
+                self.pool.unref(pages[:n_shared])
 
         def take(x):
             return np.asarray(x[:, slot:slot + 1])
@@ -350,7 +454,11 @@ class Engine:
         # on the trash page, never on re-allocated pages
         self.caches["pages"] = self.caches["pages"].at[slot].set(0)
         req.n_preempts += 1
-        self.preempt_count += 1
+        self._m_preempt.inc()
+        if self.tracer.enabled:
+            pr.t_parked = self.tracer.now()
+        self._note(req.request_id, "swap", time.perf_counter() - t0,
+                   source="compute")
         self.preempted.append(pr)
         return pr
 
@@ -376,6 +484,7 @@ class Engine:
         page = self.page_size
         row = np.zeros((self.max_len // page,), np.int32)
         n_shared = pr.n_shared_pages
+        t0 = time.perf_counter()
         m = MatchResult()
         try:
             resident = 0
@@ -406,17 +515,21 @@ class Engine:
             # dangle on freed/re-used pages.
             row[resident:n_shared] = ids_all[:n_miss]
             pos, end = resident * page, n_shared * page
-            sfx = np.asarray(pr.req.prompt_tokens[pos:end], np.int32)[None]
-            side = self._side_caches()
-            pcaches = {"attn": self.caches["attn"], "ssm": side["ssm"],
-                       "cross": side["cross"], "len": side["len"],
-                       "pages": jnp.asarray(row[None])}
-            _, new = self._prefill_suffix(
-                self.params, jnp.asarray(sfx),
-                jnp.asarray([end], jnp.int32), pcaches,
-                jnp.asarray(pos, jnp.int32), jnp.asarray(pos, jnp.int32))
-            self.caches["attn"] = new["attn"]
-            self.refault_pages_total += n_miss
+            with self.tracer.span("preempt.refault", track=self.name,
+                                  request_id=pr.req.request_id,
+                                  n_pages=n_miss):
+                sfx = np.asarray(pr.req.prompt_tokens[pos:end],
+                                 np.int32)[None]
+                side = self._side_caches()
+                pcaches = {"attn": self.caches["attn"], "ssm": side["ssm"],
+                           "cross": side["cross"], "len": side["len"],
+                           "pages": jnp.asarray(row[None])}
+                _, new = self._prefill_suffix(
+                    self.params, jnp.asarray(sfx),
+                    jnp.asarray([end], jnp.int32), pcaches,
+                    jnp.asarray(pos, jnp.int32), jnp.asarray(pos, jnp.int32))
+                self.caches["attn"] = new["attn"]
+            self._m_refault.inc(n_miss)
         if pr.handle is not None:
             # hand the reserved pages back so swap_in (the only consumer
             # of the handle) re-pops exactly them — it cannot fail now
@@ -426,22 +539,39 @@ class Engine:
             try:
                 ids, data = self.pool.swap_in(pr.handle)
             except SwapLost:
-                return self._recover_swap_lost(pr, slot, row, n_shared)
-            row[n_shared:n_shared + len(ids)] = ids
-            self.caches["attn"] = self._scatter_pages(
-                self.caches["attn"], data, jnp.asarray(ids))
-            self.swap_in_pages_total += len(ids)
+                return self._recover_swap_lost(pr, slot, row, n_shared, t0)
+            with self.tracer.span("preempt.swap_in", track=self.name,
+                                  request_id=pr.req.request_id,
+                                  n_pages=len(ids)):
+                row[n_shared:n_shared + len(ids)] = ids
+                self.caches["attn"] = self._scatter_pages(
+                    self.caches["attn"], data, jnp.asarray(ids))
+            self._m_swap_in.inc(len(ids))
         self.caches = self._insert_side(pr.side, self.caches,
                                         jnp.asarray(row), slot)
         self._slot_pages[slot] = np.asarray(row[:pr.n_pages], np.int32)
         self.slots[slot] = pr.req
         self._last_tok[slot] = pr.last_tok
         self._resume_marks[pr.req.request_id] = len(pr.req.output_tokens)
-        self.resume_count += 1
+        self._m_resume.inc()
+        self._mark_resumed(pr, t0)
         return True
 
+    def _mark_resumed(self, pr: PreemptedRequest, t0: float) -> None:
+        """Shared resume bookkeeping: the parked gap becomes a span on
+        this engine's track, and the re-fault work done inside this call
+        is reclassified from the request's parked-queue time into its
+        swap component."""
+        if self.tracer.enabled:
+            self.tracer.add("preempt.parked", pr.t_parked, self.tracer.now(),
+                            track=self.name, request_id=pr.req.request_id,
+                            n_pages=pr.n_pages)
+        self._note(pr.req.request_id, "swap", time.perf_counter() - t0,
+                   source="queue")
+
     def _recover_swap_lost(self, pr: PreemptedRequest, slot: int,
-                           row: np.ndarray, n_shared: int) -> bool:
+                           row: np.ndarray, n_shared: int,
+                           t0: float) -> bool:
         """Swap-loss recovery arm: the host swap tier lost the handle's
         contents mid-``_resume`` (the handle is consumed — there is
         nothing left to retry against). The KV it held is nonetheless
@@ -466,34 +596,38 @@ class Engine:
                 self.pool.unref(row[:n_shared])
             req.killed = True
             self.lost.append(req)
+            self._m_lost.inc()
             return True
         # the reservation freed just before swap_in is still on the free
         # list — reclaim it for the recomputed copies
-        ids = self._alloc_pages(n_priv)
-        row[n_shared:n_shared + n_priv] = ids
-        seq = list(req.prompt_tokens) + list(req.output_tokens[:-1])
-        pos = n_shared * page
-        win = n_priv * page
-        sfx = np.zeros((1, win), np.int32)
-        sfx[0, :len(seq) - pos] = seq[pos:]
-        side = self._side_caches()
-        pcaches = {"attn": self.caches["attn"], "ssm": side["ssm"],
-                   "cross": side["cross"], "len": side["len"],
-                   "pages": jnp.asarray(row[None])}
-        _, new = self._prefill_suffix(
-            self.params, jnp.asarray(sfx),
-            jnp.asarray([len(seq)], jnp.int32), pcaches,
-            jnp.asarray(pos, jnp.int32), jnp.asarray(pos, jnp.int32))
-        self.caches["attn"] = new["attn"]
-        self.swap_lost_recomputes += 1
-        self.refault_pages_total += n_priv
+        with self.tracer.span("recover.swap_lost", track=self.name,
+                              request_id=req.request_id, n_pages=n_priv):
+            ids = self._alloc_pages(n_priv)
+            row[n_shared:n_shared + n_priv] = ids
+            seq = list(req.prompt_tokens) + list(req.output_tokens[:-1])
+            pos = n_shared * page
+            win = n_priv * page
+            sfx = np.zeros((1, win), np.int32)
+            sfx[0, :len(seq) - pos] = seq[pos:]
+            side = self._side_caches()
+            pcaches = {"attn": self.caches["attn"], "ssm": side["ssm"],
+                       "cross": side["cross"], "len": side["len"],
+                       "pages": jnp.asarray(row[None])}
+            _, new = self._prefill_suffix(
+                self.params, jnp.asarray(sfx),
+                jnp.asarray([len(seq)], jnp.int32), pcaches,
+                jnp.asarray(pos, jnp.int32), jnp.asarray(pos, jnp.int32))
+            self.caches["attn"] = new["attn"]
+        self._m_swap_lost_rec.inc()
+        self._m_refault.inc(n_priv)
         self.caches = self._insert_side(pr.side, self.caches,
                                         jnp.asarray(row), slot)
         self._slot_pages[slot] = np.asarray(row[:pr.n_pages], np.int32)
         self.slots[slot] = req
         self._last_tok[slot] = pr.last_tok
         self._resume_marks[req.request_id] = len(req.output_tokens)
-        self.resume_count += 1
+        self._m_resume.inc()
+        self._mark_resumed(pr, t0)
         return True
 
     # -- stages --------------------------------------------------------------
@@ -505,6 +639,13 @@ class Engine:
 
         With the prefix cache enabled, text-only prompts reuse the
         longest cached prefix and compute only the suffix."""
+        with self.tracer.span("prefill", track=self.name,
+                              request_id=req.request_id,
+                              tokens=len(req.prompt_tokens)):
+            return self._prefill_request(req, mm_embeds, enc_frames)
+
+    def _prefill_request(self, req: Request, mm_embeds=None,
+                         enc_frames=None):
         cfg = self.cfg
         n_mm = 0
         if mm_embeds is not None and cfg.encoder is None:
@@ -524,8 +665,7 @@ class Engine:
                                            lengths, caches, mm_embeds,
                                            enc_frames)
             first = int(jnp.argmax(logits[0]))
-            self.prefill_tokens_total += n_tokens
-            self.prefill_tokens_computed += n_tokens
+            self._count_prefill(n_tokens, n_tokens)
             return first, caches
 
         if ((self.chunked_prefill or self.prefix_cache is not None)
@@ -545,8 +685,7 @@ class Engine:
                                     pcaches, mm_embeds, enc_frames)
         self.caches["attn"] = new["attn"]      # pool pages updated in place
         first = int(jnp.argmax(logits[0]))
-        self.prefill_tokens_total += n_tokens
-        self.prefill_tokens_computed += n_tokens
+        self._count_prefill(n_tokens, n_tokens)
         payload = PagedKVPayload(
             source=self, page_ids=ids, n_tokens=n_tokens,
             side={"ssm": new["ssm"], "cross": new["cross"],
@@ -580,8 +719,10 @@ class Engine:
         width = self.max_len // page
         if self.prefix_cache is not None:
             # cap at n-1 so at least one token is computed (need logits)
-            m = self.prefix_cache.match_and_ref(req.prompt_tokens,
-                                                cap=n_tokens - 1)
+            with self.tracer.span("prefix.match", track=self.name,
+                                  request_id=req.request_id):
+                m = self.prefix_cache.match_and_ref(req.prompt_tokens,
+                                                    cap=n_tokens - 1)
         else:
             m = MatchResult()
         n_shared = m.n_full_pages
@@ -596,39 +737,45 @@ class Engine:
         try:
             done = m.n_tokens                   # tokens already in the pool
             pos = n_shared * page               # page-aligned window start
+            k = 0
             while pos < n_tokens:
                 end = min(pos + C, n_tokens)
-                win = -(-end // page) * page - pos      # page-aligned window
-                ids = self._alloc_pages(-(-end // page) - pos // page)
-                held.append(ids)
-                if cow_held:
-                    # never write a shared page: private copy, then
-                    # overwrite its unmatched tail during the scatter
-                    self.caches["attn"] = self._cow_copy(
-                        self.caches["attn"],
-                        jnp.asarray([m.cow_src], jnp.int32),
-                        jnp.asarray([int(ids[0])], jnp.int32))
-                    self.pool.unref([m.cow_src])
-                    cow_held = False
-                row[0, pos // page:pos // page + len(ids)] = ids
-                sfx = np.zeros((1, win), np.int32)
-                sfx[0, done - pos:end - pos] = req.prompt_tokens[done:end]
-                side = self._side_caches()
-                pcaches = {"attn": self.caches["attn"], "ssm": side["ssm"],
-                           "cross": side["cross"], "len": side["len"],
-                           "pages": jnp.asarray(row)}
-                # lengths = this chunk's end: positions past it are
-                # dummies (masked scatter + position -1), so the window
-                # never claims tokens a later chunk will compute
-                logits, new = self._prefill_suffix(
-                    self.params, jnp.asarray(sfx),
-                    jnp.asarray([end], jnp.int32), pcaches,
-                    jnp.asarray(done, jnp.int32),
-                    jnp.asarray(pos, jnp.int32))
-                self.caches["attn"] = new["attn"]
+                with self.tracer.span("prefill.chunk", track=self.name,
+                                      request_id=req.request_id, chunk=k,
+                                      tokens=end - done):
+                    win = -(-end // page) * page - pos  # page-aligned window
+                    ids = self._alloc_pages(-(-end // page) - pos // page)
+                    held.append(ids)
+                    if cow_held:
+                        # never write a shared page: private copy, then
+                        # overwrite its unmatched tail during the scatter
+                        self.caches["attn"] = self._cow_copy(
+                            self.caches["attn"],
+                            jnp.asarray([m.cow_src], jnp.int32),
+                            jnp.asarray([int(ids[0])], jnp.int32))
+                        self.pool.unref([m.cow_src])
+                        cow_held = False
+                    row[0, pos // page:pos // page + len(ids)] = ids
+                    sfx = np.zeros((1, win), np.int32)
+                    sfx[0, done - pos:end - pos] = \
+                        req.prompt_tokens[done:end]
+                    side = self._side_caches()
+                    pcaches = {"attn": self.caches["attn"],
+                               "ssm": side["ssm"], "cross": side["cross"],
+                               "len": side["len"], "pages": jnp.asarray(row)}
+                    # lengths = this chunk's end: positions past it are
+                    # dummies (masked scatter + position -1), so the window
+                    # never claims tokens a later chunk will compute
+                    logits, new = self._prefill_suffix(
+                        self.params, jnp.asarray(sfx),
+                        jnp.asarray([end], jnp.int32), pcaches,
+                        jnp.asarray(done, jnp.int32),
+                        jnp.asarray(pos, jnp.int32))
+                    self.caches["attn"] = new["attn"]
                 chunks.append((end - done, len(ids)))
                 done = end
                 pos += win
+                k += 1
         except BaseException:
             # un-wind every ref this request took (match, CoW source,
             # every chunk's fresh pages) so a failed prefill leaks nothing
@@ -643,8 +790,7 @@ class Engine:
         ids = np.asarray(row[0, :n_pages], np.int32)
         if self.prefix_cache is not None:
             self.prefix_cache.insert(req.prompt_tokens, ids)
-        self.prefill_tokens_total += n_tokens
-        self.prefill_tokens_computed += n_tokens - m.n_tokens
+        self._count_prefill(n_tokens, n_tokens - m.n_tokens)
         payload = PagedKVPayload(
             source=self, page_ids=ids, n_tokens=n_tokens,
             side={"ssm": new["ssm"], "cross": new["cross"],
@@ -674,12 +820,15 @@ class Engine:
         if not free:
             raise NoFreeSlot()
         slot = free[0]
-        if self.paged:
-            self._insert_paged(prefilled, slot)
-        else:
-            self.caches = self._insert(prefilled, self.caches, slot)
-            self.kv_insert_bytes = self._attn_kv_nbytes(prefilled["attn"])
-            self.kv_insert_bytes_total += self.kv_insert_bytes
+        with self.tracer.span("insert", track=self.name,
+                              request_id=req.request_id):
+            if self.paged:
+                self._insert_paged(prefilled, slot)
+            else:
+                self.caches = self._insert(prefilled, self.caches, slot)
+                nbytes = self._attn_kv_nbytes(prefilled["attn"])
+                self._m_insert_bytes_last.set(nbytes)
+                self._m_insert_bytes.inc(nbytes)
         self.slots[slot] = req
         self._last_tok[slot] = first_token
         if append_token:
@@ -699,15 +848,15 @@ class Engine:
     def _insert_paged(self, payload: PagedKVPayload, slot: int) -> None:
         if payload.source is self:
             ids = payload.page_ids               # zero-copy handoff
-            self.kv_insert_bytes = 0
+            self._m_insert_bytes_last.set(0)
         else:
             ids = self._alloc_pages_preempting(payload.n_pages)
             self.caches["attn"] = self._copy_pages(
                 payload.source.caches["attn"], self.caches["attn"],
                 jnp.asarray(payload.page_ids), jnp.asarray(ids))
             payload.source.pool.free(payload.page_ids)
-            self.kv_insert_bytes = payload.kv_nbytes
-        self.kv_insert_bytes_total += self.kv_insert_bytes
+            self._m_insert_bytes_last.set(payload.kv_nbytes)
+        self._m_insert_bytes.inc(self._m_insert_bytes_last.value)
         row = np.zeros((self.max_len // self.page_size,), np.int32)
         row[:len(ids)] = ids
         self.caches = self._insert_side(payload.side, self.caches,
@@ -774,7 +923,21 @@ class Engine:
         """One lock-step decode over all slots. Returns (req, token, done)
         for every ACTIVE slot (inactive slots compute but are ignored).
         Preempted requests are re-admitted first (FIFO, page-permitting)
-        so a resumed slot decodes in this very step."""
+        so a resumed slot decodes in this very step.
+
+        Decode spans are SAMPLED: one ``decode.step`` span every
+        ``tracer.decode_sample`` steps (this is the highest-frequency
+        phase; per-step spans at production rates would dominate the
+        trace)."""
+        self._decode_steps += 1
+        if self.tracer.want_decode_span(self._decode_steps):
+            with self.tracer.span("decode.step", track=self.name,
+                                  step=self._decode_steps,
+                                  batch=self.n_active):
+                return self._decode_step_inner()
+        return self._decode_step_inner()
+
+    def _decode_step_inner(self) -> List[Tuple[Request, int, bool]]:
         if self.paged and self.preempted:
             self.try_resume()
         # single device->host sync per step (not per slot)

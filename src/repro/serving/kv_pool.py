@@ -53,6 +53,7 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.faults import SITE_SWAP_IN, FaultInjector, SwapLost
+from repro.core.telemetry import MetricsRegistry
 
 TRASH_PAGE = 0
 
@@ -104,13 +105,23 @@ class PagePool:
     """
 
     def __init__(self, n_pages: int, page_size: int,
-                 injector: Optional[FaultInjector] = None):
+                 injector: Optional[FaultInjector] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 name: str = "pool"):
         if n_pages < 2:
             raise ValueError("need n_pages >= 2 (page 0 is reserved)")
         if page_size < 1:
             raise ValueError("page_size must be positive")
         self.n_pages = int(n_pages)
         self.page_size = int(page_size)
+        # occupancy gauges + high-water mark live in the (possibly
+        # shared) metrics registry, labeled by the owning engine's name;
+        # `peak_used` stays readable under its historical attribute name
+        # via the property below.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._m_used = self.metrics.gauge("pool_used_pages", pool=name)
+        self._m_occ = self.metrics.gauge("pool_occupancy", pool=name)
+        self._m_peak = self.metrics.gauge("pool_peak_used_pages", pool=name)
         # fault plane for the host swap tier (SITE_SWAP_IN); a private
         # empty-plan injector means swap_in never faults.
         self.injector = injector if injector is not None else FaultInjector()
@@ -126,9 +137,12 @@ class PagePool:
         self._handle_seq = itertools.count(1)
         self.swapped_out_pages_total = 0
         self.swapped_in_pages_total = 0
-        # high-water mark of used pages (benchmarks: chunked-prefill
-        # memory accounting)
-        self.peak_used = 0
+
+    @property
+    def peak_used(self) -> int:
+        """High-water mark of used pages (benchmarks: chunked-prefill
+        memory accounting). Backed by the registry gauge."""
+        return int(self._m_peak.value)
 
     @property
     def n_free(self) -> int:
@@ -137,6 +151,12 @@ class PagePool:
     @property
     def n_used(self) -> int:
         return (self.n_pages - 1) - len(self._free)
+
+    def _track_occupancy(self) -> None:
+        used = self.n_used
+        self._m_used.set(used)
+        self._m_occ.set(used / max(1, self.n_pages - 1))
+        self._m_peak.max(used)
 
     def pages_for(self, n_tokens: int) -> int:
         return pages_for(n_tokens, self.page_size)
@@ -156,7 +176,7 @@ class PagePool:
         del self._free[-n:]
         for p in out:
             self._refs[p] = 1
-        self.peak_used = max(self.peak_used, self.n_used)
+        self._track_occupancy()
         return np.asarray(out, np.int32)
 
     def ref(self, pages: Sequence[int]) -> None:
@@ -182,6 +202,7 @@ class PagePool:
             if self._refs[p] == 0:
                 del self._refs[p]
                 self._free.append(p)
+        self._track_occupancy()
 
     unref = free
 
