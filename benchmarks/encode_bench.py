@@ -1,0 +1,169 @@
+"""Encode-stage E->P hand-off benchmark: async prefetch vs sync push
+vs encode-inline.
+
+Two halves, both deterministic:
+
+1. REAL cluster (llava reduced): one multimodal request through each
+   overlap arm. Greedy output must be BIT-IDENTICAL across all three
+   arms and the monolithic engine (the arms differ only in modeled
+   accounting), the per-request transfer component must order
+   inline < async <= sync, a same-image/longer-prompt follow-up must
+   skip the encode forward outright via the (mm-hash, token-run)
+   prefix key, and the traced run must satisfy the components-sum-
+   to-e2e ledger invariant.
+
+2. MODELED sweep (openpangu-7b-vl cost model): single-request TTFT at
+   the paper's Table 3 resolutions under each arm. Async must beat the
+   synchronous push at >= 2 resolutions (the transfer hides under
+   dispatch + the pre-image text prefill; only the feature-arrival
+   barrier at the first image position is exposed).
+
+Emits a BENCH_encode.json snapshot next to the repo root so the
+E->P overlap trajectory is recorded per PR.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+# async must beat sync on modeled TTFT at at least this many of the
+# paper's Table 3 resolutions
+MIN_ASYNC_WINS = 2
+
+
+def bench_encode() -> List[str]:
+    import jax
+    from repro.configs import get_config
+    from repro.core.cluster import EPDCluster
+    from repro.core.costmodel import CostModel
+    from repro.core.telemetry import Tracer
+    from repro.models import frontend as FE
+    from repro.models.model import init_params
+    from repro.serving.engine import Engine
+    from repro.serving.request import Request
+
+    rows = ["encode,value,derived"]
+    snap = {"config": {"real_model": "llava-next-mistral-7b (reduced)",
+                       "modeled_model": "openpangu-7b-vl",
+                       "text_tokens": 256, "mm_pos": 64},
+            "cluster": {}, "resolutions": []}
+
+    # ---- REAL cluster: three arms, bit-identical, ledger-clean ----
+    cfg = get_config("llava-next-mistral-7b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompt = list(range(5, 15))
+
+    outs, arms = {}, {}
+    for arm in ("async", "sync", "inline"):
+        tracer = Tracer(enabled=True)
+        cl = EPDCluster(cfg, params, max_batch=2, max_len=96, paged=True,
+                        page_size=8, prefix_cache=True, ep_overlap=arm,
+                        tracer=tracer)
+        r = Request(prompt_tokens=list(prompt), max_new_tokens=5,
+                    mm_payload=b"bench-img", mm_tokens=8, mm_pos=4)
+        cl.submit(r)
+        cl.run_until_done()
+        # same image + longer prompt: the (mm-hash, token-run) prefix
+        # key covers the whole image run -> encode skipped outright
+        r2 = Request(prompt_tokens=list(prompt) + [77, 78],
+                     max_new_tokens=5, mm_payload=b"bench-img",
+                     mm_tokens=8, mm_pos=4)
+        cl.submit(r2)
+        cl.run_until_done()
+        assert cl.report.encode_skips == 1, \
+            f"{arm}: cache-hit rerun must skip the encode forward"
+        assert cl.store.stats.puts == 1
+        tracer.assert_balanced()
+        cl.acc.assert_all_closed()
+        cl.acc.check_all(tol=0.01)
+        cl.prefill_engine.assert_no_page_leaks()
+        cl.decode_engine.assert_no_page_leaks()
+        att = cl.attribution()
+        row = att["requests"][0]
+        outs[arm] = (list(r.output_tokens), list(r2.output_tokens))
+        arms[arm] = {
+            "transfer_ms": row["components_ms"]["transfer"],
+            "encode_skips": cl.report.encode_skips,
+            "overlap_ratio": round(
+                cl.metrics.value("ep_overlap_ratio"), 4),
+            "mean_components_ms": att["mean_components_ms"],
+        }
+
+    mono = Engine(cfg, params, max_batch=2, max_len=96)
+    rm = Request(prompt_tokens=list(prompt), max_new_tokens=5,
+                 mm_payload=b"bench-img", mm_tokens=8, mm_pos=4)
+    mono.run_request(rm)
+    assert outs["async"] == outs["sync"] == outs["inline"], \
+        "overlap arms must be bit-identical"
+    assert outs["async"][0] == list(rm.output_tokens), \
+        "disaggregated encode must match the monolithic engine"
+    xi, xa, xs = (arms[a]["transfer_ms"]
+                  for a in ("inline", "async", "sync"))
+    assert xi < xa <= xs, \
+        f"E->P exposure must order inline<async<=sync ({xi},{xa},{xs})"
+
+    snap["cluster"] = {"arms": arms, "bit_identical": True,
+                       "monolithic_match": True}
+    rows.append(
+        f"cluster_arms,bit_identical,"
+        f"transfer_ms_inline_{xi}_async_{xa}_sync_{xs}")
+    rows.append(
+        f"cluster_prefix_reuse,encode_skipped,"
+        f"1_skip_1_put_overlap_{arms['async']['overlap_ratio']}")
+
+    # ---- MODELED sweep: Table 3 resolutions, single-request TTFT ----
+    model = get_config("openpangu-7b-vl")
+    cost = CostModel(model)
+    text, mm_pos = 256, 64
+    wins = 0
+    for res, n_mm in sorted(FE.PAPER_RESOLUTION_TOKENS.items(),
+                            key=lambda kv: kv[1]):
+        total = text + n_mm
+        enc = cost.encode_time(n_mm)
+        pf = cost.prefill_time(total)
+        nbytes = cost.feature_bytes(n_mm)
+        disp = cost.dispatch_latency(nbytes)
+        xfer = cost.feature_transfer_time(nbytes)
+        # the pre-image text chunk prefills while the feature is in
+        # flight; the barrier is only at the first image position
+        pre = cost.chunk_prefill_times(total, [mm_pos, total - mm_pos])[0]
+        ttft = {
+            "inline": enc + pf,
+            "sync": enc + disp + xfer + pf,
+            "async": enc + disp + max(0.0, xfer - disp - pre) + pf,
+        }
+        hidden = min(xfer, disp + pre)
+        win = ttft["async"] < ttft["sync"]
+        wins += win
+        snap["resolutions"].append({
+            "resolution": f"{res[0]}x{res[1]}", "mm_tokens": n_mm,
+            "feature_mb": round(nbytes / 2**20, 2),
+            "ttft_ms": {k: round(v * 1e3, 3) for k, v in ttft.items()},
+            "transfer_hidden_ms": round(hidden * 1e3, 3),
+            "overlap_ratio": round(hidden / xfer, 4) if xfer else 1.0,
+            "async_beats_sync": bool(win),
+        })
+        rows.append(
+            f"modeled_{res[0]}x{res[1]},{n_mm}_mm_tokens,"
+            f"ttft_ms_async_{ttft['async'] * 1e3:.2f}_"
+            f"sync_{ttft['sync'] * 1e3:.2f}_"
+            f"inline_{ttft['inline'] * 1e3:.2f}")
+    assert wins >= MIN_ASYNC_WINS, \
+        f"async must beat sync at >= {MIN_ASYNC_WINS} resolutions " \
+        f"(got {wins})"
+    snap["config"]["async_wins"] = wins
+    rows.append(f"modeled_sweep,async_wins,"
+                f"{wins}_of_{len(FE.PAPER_RESOLUTION_TOKENS)}_resolutions")
+
+    out = os.path.join(os.path.dirname(__file__), "..",
+                       "BENCH_encode.json")
+    with open(os.path.abspath(out), "w") as f:
+        json.dump(snap, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in bench_encode():
+        print(row)

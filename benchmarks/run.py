@@ -53,6 +53,10 @@ def main() -> None:
         from benchmarks.fault_bench import bench_faults
         for row in bench_faults():
             print(row)
+    if only is None or "encode" in only:
+        from benchmarks.encode_bench import bench_encode
+        for row in bench_encode():
+            print(row)
     # --trace forces the traced observability workload so there is
     # always a Perfetto trace to export, whatever the filter says
     if only is None or "observ" in only or trace_path:

@@ -21,20 +21,20 @@ queues, mirroring the paper's logical-isolation/physical-co-location.
 """
 from __future__ import annotations
 
-import hashlib
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.costmodel import CostModel, Hardware, V5E
 from repro.core.faults import (DEFAULT_RETRY, NO_RETRY, SITE_DECODE_CRASH,
                                SITE_STORE_FETCH, FaultInjector, FaultPlan,
                                InstanceDown, RetryPolicy, TransferError)
+from repro.core.ep_prefetch import EPPrefetcher
+from repro.core.events import EventLoop
 from repro.core.kv_transfer import (TransferPlan, emit_spans,
                                     plan as kv_plan,
                                     plan_chunked as kv_plan_chunked)
@@ -42,6 +42,7 @@ from repro.core.mm_store import MMStore
 from repro.core.telemetry import (NULL_TRACER, LatencyAccountant,
                                   MetricsRegistry, Tracer)
 from repro.models import frontend as FE
+from repro.serving.encode_engine import EncodeEngine
 from repro.serving.engine import Engine
 from repro.serving.kv_pool import PoolExhausted
 from repro.serving.request import Request
@@ -92,6 +93,12 @@ class ClusterReport:
         return int(self.metrics.value("transfer_replans_total"))
 
     @property
+    def encode_skips(self) -> int:
+        """Encode forwards skipped outright because the (mm-hash,
+        token-run) prefix key already covered the whole image run."""
+        return int(self.metrics.value("encode_skips_total"))
+
+    @property
     def mean_kv_overlap(self) -> float:
         if not self.kv_plans:
             return 1.0
@@ -110,6 +117,7 @@ class EPDCluster:
                  preemption: bool = False,
                  n_decode_pool_pages: Optional[int] = None,
                  n_decode: int = 1,
+                 n_encode: int = 1, ep_overlap: str = "async",
                  faults: Optional[FaultPlan] = None,
                  retry: Optional[RetryPolicy] = None,
                  recovery: bool = True,
@@ -146,6 +154,31 @@ class EPDCluster:
         self.store = MMStore(injector=self.injector)
         self.cost = CostModel(cfg, hw,
                               page_tokens=page_size if paged else 0)
+        # Encode stage: real EncodeEngine instances (round-robin) feeding
+        # the MM Store, with the E->P hand-off modeled per ep_overlap:
+        #   async  — hash-only announce; the feature transfer hides under
+        #            dispatch + the pre-image text prefill (RServe-style
+        #            barrier only at image-token positions);
+        #   sync   — the feature pushes E->P serially before prefill;
+        #   inline — encode folds into the prefill instance (no transfer).
+        # Arms differ ONLY in modeled accounting charges: the same
+        # features flow through the same jitted forwards, so greedy
+        # output is bit-identical across all three.
+        if ep_overlap not in ("async", "sync", "inline"):
+            raise ValueError(f"unknown ep_overlap mode {ep_overlap!r}")
+        if n_encode < 1:
+            raise ValueError("need n_encode >= 1")
+        self.ep_overlap = ep_overlap
+        self.encode_engines = (
+            [EncodeEngine(cfg, params, store=self.store, name=f"E{i}",
+                          tracer=self.tracer, metrics=self.metrics)
+             for i in range(n_encode)]
+            if cfg.frontend is not None else [])
+        self._next_encode = 0
+        self._ep_loop = EventLoop()
+        self.prefetcher = EPPrefetcher(self._ep_loop, self.store, self.cost,
+                                       async_mode=(ep_overlap == "async"))
+        self._encode_skipped: set = set()
         self.kv_scheme = kv_scheme
         self.paged = paged
         self.chunked_prefill = chunked_prefill
@@ -235,66 +268,142 @@ class EPDCluster:
         return self.acc.report()
 
     # ---- Encode stage ----
+    def _pick_encode(self) -> EncodeEngine:
+        eng = self.encode_engines[self._next_encode
+                                  % len(self.encode_engines)]
+        self._next_encode += 1
+        return eng
+
+    def _can_skip_encode(self, req: Request, key: str) -> bool:
+        """True when the prefill engine's radix tree already holds KV
+        for the WHOLE image run under the (mm-hash, token-run) prefix
+        key — then neither the encode forward nor the feature fetch is
+        needed: the image's contribution to this prompt is entirely KV
+        reuse (MM Store dedup composed with the prefix cache)."""
+        pc = self.prefill_engine.prefix_cache
+        if pc is None or self.cfg.encoder is not None or not req.mm_tokens:
+            return False
+        p = list(req.prompt_tokens)
+        key_tokens = (p[:req.mm_pos] + FE.mm_key_run(key, req.mm_tokens)
+                      + p[req.mm_pos:])
+        run_end = req.mm_pos + req.mm_tokens
+        if run_end > len(key_tokens) - 1:
+            # the match is capped at n-1 (one token must be computed for
+            # logits): a run reaching the last token can't be covered
+            return False
+        return pc.match_len(key_tokens, cap=len(key_tokens) - 1) >= run_end
+
     def encode(self, req: Request) -> Optional[str]:
-        if not req.is_multimodal:
+        if not req.is_multimodal or not self.encode_engines:
             return None
-        with self.tracer.span("encode", track="E0",
+        eng = self._pick_encode()
+        key = FE.content_hash(req.mm_payload)
+        if self._can_skip_encode(req, key):
+            self.metrics.counter("encode_skips_total").inc()
+            self._encode_skipped.add(req.request_id)
+            if self.tracer.enabled:
+                t = self.acc.clock()
+                self.tracer.add("encode.skip", t, t, track=eng.name,
+                                request_id=req.request_id)
+            return key
+        with self.tracer.span("encode", track=eng.name,
                               request_id=req.request_id):
-            key = hashlib.sha256(req.mm_payload).hexdigest()
-            if not self.store.contains(key):
-                self.store.stats.misses += 1
-                feats = FE.stub_embeddings(self.cfg, req.mm_payload,
-                                           req.mm_tokens or None)
-                self.store.put(key, np.asarray(feats), feats.size * 4)
-            else:
-                # dedup: skip Encode entirely (cross-request reuse, §3.2);
-                # contains() doesn't consume injected faults — those hit
-                # the Prefill-side fetch, exercising the recompute path.
-                self.store.stats.hits += 1
+            eng.encode_request(req)
         return key
+
+    # ---- E->P hand-off accounting (overlap arms) ----
+    def _charge_ep_overlap(self, req: Request, key: str) -> None:
+        """Charge the MODELED E->P hand-off latency for one feature per
+        the overlap arm (the real arrays move in-process, like the P->D
+        transfer). inline: zero — there is no E->P link. sync: dispatch
+        plus the full feature push, serialized before prefill. async:
+        hash-only announce; the transfer hides under dispatch + the
+        pre-image TEXT prefill (chunks before ``mm_pos`` proceed while
+        the feature is in flight), so only the exposed remainder — the
+        RServe-style feature-arrival barrier at the first image-token
+        position — delays the request."""
+        if self.ep_overlap == "inline":
+            return
+        nbytes = self.cost.feature_bytes(req.mm_tokens)
+        disp = self.cost.dispatch_latency(nbytes)
+        xfer = self.cost.feature_transfer_time(nbytes)
+        pre = 0.0
+        if req.mm_pos > 0:
+            pre = self.cost.chunk_prefill_times(
+                req.total_prompt_len,
+                [req.mm_pos, req.total_prompt_len - req.mm_pos])[0]
+        if self.ep_overlap == "async":
+            hint = disp + pre
+            extra = disp + max(0.0, xfer - disp - pre)
+        else:
+            hint = 0.0
+            extra = disp + xfer
+        # the prefetcher records the announce->ready bookkeeping (its
+        # overlap_ratio is the paper's Table 3 metric); the loop fires
+        # the ready callback synchronously — features are already local
+        self.prefetcher.notify(req.request_id, key, req.mm_tokens,
+                               on_ready=lambda _rc: None,
+                               scheduling_latency_hint=hint)
+        self._ep_loop.run()
+        self.acc.sync()
+        t0 = self.acc.now
+        self.acc.advance(extra, req.request_id, "transfer")
+        if self.tracer.enabled and extra > 0:
+            self.tracer.add("ep.prefetch", t0, self.acc.now, track="store",
+                            request_id=req.request_id,
+                            mode=self.ep_overlap, nbytes=nbytes)
 
     # ---- Prefill stage (with FT retry + recompute on store miss) ----
     def prefill(self, req: Request, key: Optional[str]):
-        mm = None
-        enc = None
-        if key is not None:
-            # layered store-fetch arm: retry with backoff per the policy
-            # (attempt keys the injector's draw, so transient faults
-            # heal), then fall back to the §3.2 local recompute. The
-            # default NO_RETRY policy keeps the legacy single-attempt
-            # behavior exactly.
-            feats = self.store.get(key, record=False)
-            attempt = 1
-            while feats is None and attempt < self.retry.max_attempts:
-                back = self.retry.backoff(attempt, key=key)
-                self.metrics.counter("retry_time_seconds_total",
-                                     site=SITE_STORE_FETCH).inc(back)
-                self.metrics.counter("recovery_retries_total",
-                                     site=SITE_STORE_FETCH).inc()
-                # backoff is modeled time: charge it to the request's
-                # retry component and render it on the store track
-                self.acc.sync()
-                t0 = self.acc.now
-                self.acc.advance(back, req.request_id, "retry")
-                if self.tracer.enabled:
-                    self.tracer.add("retry.store", t0, self.acc.now,
-                                    track="store",
-                                    request_id=req.request_id,
-                                    attempt=attempt)
-                feats = self.store.get(key, record=False, attempt=attempt)
-                attempt += 1
-            if feats is None:
-                # fault tolerance: recompute locally (paper §3.2)
-                feats = np.asarray(FE.stub_embeddings(
-                    self.cfg, req.mm_payload, req.mm_tokens or None))
-                self.report.recomputes += 1
-            feats = jnp.asarray(feats)[None]
-            if self.cfg.encoder is not None:
-                enc = feats
-            else:
-                mm = feats
-        first, caches = self.prefill_engine.prefill_request(req, mm, enc)
-        return first, caches
+        if key is None:
+            return self.prefill_engine.prefill_request(req)
+        if req.request_id in self._encode_skipped:
+            # full-run prefix hit: no features needed — prefill rides
+            # the (mm-hash, token-run) radix key alone, and there is no
+            # E->P transfer to charge
+            self._encode_skipped.discard(req.request_id)
+            return self.prefill_engine.prefill_request(req, mm_key=key)
+        # layered store-fetch arm: retry with backoff per the policy
+        # (attempt keys the injector's draw, so transient faults
+        # heal), then fall back to the §3.2 local recompute. The
+        # default NO_RETRY policy keeps the legacy single-attempt
+        # behavior exactly.
+        feats = self.store.get(key, record=False)
+        attempt = 1
+        while feats is None and attempt < self.retry.max_attempts:
+            back = self.retry.backoff(attempt, key=key)
+            self.metrics.counter("retry_time_seconds_total",
+                                 site=SITE_STORE_FETCH).inc(back)
+            self.metrics.counter("recovery_retries_total",
+                                 site=SITE_STORE_FETCH).inc()
+            # backoff is modeled time: charge it to the request's
+            # retry component and render it on the store track
+            self.acc.sync()
+            t0 = self.acc.now
+            self.acc.advance(back, req.request_id, "retry")
+            if self.tracer.enabled:
+                self.tracer.add("retry.store", t0, self.acc.now,
+                                track="store",
+                                request_id=req.request_id,
+                                attempt=attempt)
+            feats = self.store.get(key, record=False, attempt=attempt)
+            attempt += 1
+        if feats is None:
+            # fault tolerance: recompute locally (paper §3.2) through
+            # the SAME jitted frontend forward the Encode stage ran, so
+            # the rebuilt features are bit-identical — and re-put under
+            # the same hash (the dedup-put now adopts the fresh tuple)
+            feats = self.encode_engines[0].compute_features(
+                req.mm_payload, req.mm_tokens)
+            self.store.put(key, feats, feats.nbytes)
+            self.report.recomputes += 1
+        else:
+            self._charge_ep_overlap(req, key)
+        feats = jnp.asarray(feats)[None]
+        if self.cfg.encoder is not None:
+            return self.prefill_engine.prefill_request(req, None, feats)
+        return self.prefill_engine.prefill_request(req, mm_feats=feats,
+                                                   mm_key=key)
 
     # ---- P->D transfer + Decode import ----
     def transfer_and_insert(self, req: Request, caches, first: int,
@@ -462,7 +571,8 @@ class EPDCluster:
         seq = list(req.prompt_tokens) + list(req.output_tokens[:-1])
         shadow = Request(prompt_tokens=seq, max_new_tokens=1,
                          mm_payload=req.mm_payload,
-                         mm_tokens=req.mm_tokens, priority=req.priority)
+                         mm_tokens=req.mm_tokens, mm_pos=req.mm_pos,
+                         priority=req.priority)
         # the shadow prefill's charges (store retries, transfer
         # exposure) bill the original request's ledger entry
         self.acc.alias(shadow.request_id, req.request_id)
@@ -551,4 +661,7 @@ class EPDCluster:
         if self.paged:
             self.report.swap_losses = sum(e.pool.swap_lost_total
                                           for e in self.decode_engines)
+        if self.prefetcher.records:
+            self.metrics.gauge("ep_overlap_ratio").set(
+                self.prefetcher.mean_overlap_ratio)
         return done

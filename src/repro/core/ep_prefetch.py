@@ -27,6 +27,7 @@ class PrefetchRecord:
     transfer_latency: float
     scheduling_latency: float
     recomputed: bool = False
+    evicted_in_flight: bool = False
 
     @property
     def hidden(self) -> float:
@@ -47,12 +48,17 @@ class EPPrefetcher:
     """Event-driven E->P feature mover; one per Prefill instance."""
 
     def __init__(self, loop: EventLoop, store: MMStore, cost: CostModel,
-                 *, async_mode: bool = True):
+                 *, async_mode: bool = True, pin: bool = True):
         self.loop = loop
         self.store = store
         self.cost = cost
         self.async_mode = async_mode
+        # pin=True holds a refcount on the feature between announce and
+        # fire so an interleaved eviction cannot vanish it mid-prefetch;
+        # pin=False falls back to the fire-time re-check + recompute arm.
+        self.pin = pin
         self.records: List[PrefetchRecord] = []
+        self.inflight_evictions = 0
 
     def notify(self, request_id: int, key: str, n_tokens: int,
                on_ready: Callable[[bool], None],
@@ -75,6 +81,7 @@ class EPPrefetcher:
         sched = max(self.cost.dispatch_latency(nbytes),
                     scheduling_latency_hint)
         found = self.store.get(key, record=False) is not None
+        pinned = bool(self.pin and found and self.store.pin(key))
         recompute = 0.0
         if not found:
             # fault-tolerant recomputation on the Prefill instance
@@ -93,7 +100,25 @@ class EPPrefetcher:
             # dispatch AND sits on the Encode instance's stream
             delay = sched + transfer + recompute
             e_block = transfer
-        self.loop.after(delay, lambda: on_ready(not found))
+
+        def _fire() -> None:
+            # Presence was checked at ANNOUNCE time but on_ready fires
+            # `delay` later — an eviction in that window would hand
+            # Prefill a vanished entry. Release any pin, then re-check:
+            # a gap here routes through the same recompute arm a store
+            # miss does (charged as extra delay before on_ready).
+            if pinned:
+                self.store.unpin(key)
+            if found and not self.store.contains(key):
+                rec.evicted_in_flight = True
+                rec.recomputed = True
+                self.inflight_evictions += 1
+                self.loop.after(self.cost.encode_time(n_tokens),
+                                lambda: on_ready(True))
+                return
+            on_ready(rec.recomputed)
+
+        self.loop.after(delay, _fire)
         return e_block
 
     # -- metrics ---------------------------------------------------------------

@@ -21,6 +21,7 @@ class StoreStats:
     misses: int = 0
     dedup_puts: int = 0          # put of an already-present key
     evictions: int = 0
+    rejected_puts: int = 0       # entry alone exceeds capacity
     faults_injected: int = 0
     bytes_stored: int = 0
 
@@ -39,6 +40,10 @@ class MMStore:
         self._data: "collections.OrderedDict[str, Tuple[Any, int]]" = \
             collections.OrderedDict()
         self.stats = StoreStats()
+        # pinned entries (refcounted) are exempt from eviction: the E->P
+        # prefetcher pins a feature between announce and fire so the
+        # Prefill consumer never races an interleaved eviction.
+        self._pins: Dict[str, int] = {}
         # All fault decisions route through the (possibly shared) fault
         # plane; a private injector with an empty plan means "no faults"
         # until someone arms one via inject_fault.
@@ -47,8 +52,25 @@ class MMStore:
     # -- core API -------------------------------------------------------------
     def put(self, key: str, value: Any, nbytes: int) -> None:
         if key in self._data:
+            # dedup put of a known key: the key is content-addressed so
+            # the VALUE is semantically identical, but a recompute may
+            # re-put under the same hash with a different representation
+            # (or corrected size) — adopt the new tuple and reconcile
+            # byte accounting instead of silently keeping the stale one.
             self.stats.dedup_puts += 1
+            old_nb = self._data[key][1]
+            self._data[key] = (value, nbytes)
+            self.stats.bytes_stored += nbytes - old_nb
             self._data.move_to_end(key)
+            self._evict()
+            return
+        if self.capacity is not None and nbytes > self.capacity:
+            # an entry that alone exceeds capacity can never fit the
+            # budget: admitting it would pin ``bytes_stored`` above
+            # ``capacity`` forever (the old `len > 1` eviction guard did
+            # exactly that). Reject the put outright — the caller holds
+            # the value it just computed, so nothing is lost.
+            self.stats.rejected_puts += 1
             return
         self.stats.puts += 1
         self._data[key] = (value, nbytes)
@@ -85,11 +107,46 @@ class MMStore:
     def nbytes(self, key: str) -> int:
         return self._data[key][1] if key in self._data else 0
 
+    def resident_bytes(self) -> int:
+        """Ground-truth sum of resident entry sizes (audits: must always
+        equal ``stats.bytes_stored``)."""
+        return sum(nb for _, nb in self._data.values())
+
+    # -- pinning --------------------------------------------------------------
+    def _pinned(self, key: str) -> bool:
+        return self._pins.get(key, 0) > 0
+
+    def pin(self, key: str) -> bool:
+        """Refcounted eviction exemption for an in-flight consumer (the
+        E->P prefetcher between announce and fire). Returns False when
+        the key is not resident (nothing to pin)."""
+        if key not in self._data:
+            return False
+        self._pins[key] = self._pins.get(key, 0) + 1
+        return True
+
+    def unpin(self, key: str) -> None:
+        n = self._pins.get(key, 0)
+        if n <= 1:
+            self._pins.pop(key, None)
+        else:
+            self._pins[key] = n - 1
+        # release may leave the store above budget (pins can hold it
+        # there); reconverge now that the entry is evictable again
+        self._evict()
+
     def _evict(self) -> None:
         if self.capacity is None:
             return
-        while self.stats.bytes_stored > self.capacity and len(self._data) > 1:
-            _, (_, nb) = self._data.popitem(last=False)
+        while self.stats.bytes_stored > self.capacity:
+            # LRU order, skipping pinned entries. A single oversized
+            # entry is evicted too (the old `len > 1` guard kept it
+            # forever with bytes_stored > capacity never reconverging).
+            victim = next((k for k in self._data if not self._pinned(k)),
+                          None)
+            if victim is None:
+                return                     # everything pinned: hold over
+            _, nb = self._data.pop(victim)
             self.stats.bytes_stored -= nb
             self.stats.evictions += 1
 

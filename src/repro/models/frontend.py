@@ -63,3 +63,23 @@ def feature_bytes(cfg: ModelConfig, n_tokens: int, dtype_bytes: int = 2) -> int:
     """Size of the E->P payload for n vision/audio tokens (post-projector,
     d_model-wide — what actually travels per the paper's Table 3)."""
     return n_tokens * cfg.d_model * dtype_bytes
+
+
+def mm_key_run(key: str, n: int) -> list:
+    """Pseudo-token run standing in for a multimodal segment in the radix
+    prefix-cache key: (mm-content-hash, token-run).
+
+    Deterministic in the content hash, so the same image always expands to
+    the same run (identical image + prompt => prefix-cache hit over the mm
+    segment, composing MM Store dedup with KV reuse). Tokens are NEGATIVE
+    ints, disjoint from any real vocab id — they are never embedded, only
+    matched; the engine feeds 0 at mm positions and overwrites those
+    embeddings with the projected features.
+    """
+    seed = int.from_bytes(hashlib.sha256(key.encode()).digest()[:8], "big")
+    out, x = [], seed
+    for _ in range(n):
+        # 64-bit LCG (Knuth MMIX constants): cheap, deterministic spread
+        x = (x * 6364136223846793005 + 1442695040888963407) & ((1 << 64) - 1)
+        out.append(-1 - (x >> 33))
+    return out

@@ -85,7 +85,8 @@ def prefill_forward(params, cfg: ModelConfig, tokens, caches,
                     *, lengths: Optional[jax.Array] = None,
                     mm_embeds=None, enc_frames=None,
                     prefix_len: Optional[jax.Array] = None,
-                    pos_base: Optional[jax.Array] = None):
+                    pos_base: Optional[jax.Array] = None,
+                    mm_feats=None, mm_start=None):
     """Populate caches from a (padded) prompt batch.
 
     lengths: (B,) true prompt lengths (including mm tokens). Padded
@@ -96,6 +97,12 @@ def prefill_forward(params, cfg: ModelConfig, tokens, caches,
     leading ``prefix_len - pos_base`` entries are dummies). Queries get
     absolute positions, attend over gathered-prefix + in-batch KV, and
     the returned logits are still for the true last prompt token.
+    mm_feats / mm_start (Encode-stage hand-off): features already
+    projected to d_model, (B, n_mm, d) — scattered over the embedding
+    stream at absolute positions [mm_start, mm_start + n_mm), replacing
+    the placeholder token embeddings there. Unlike ``mm_embeds`` (the
+    fused prepend path) this composes with suffix prefill: a chunk
+    scatters exactly the slice of the image run it covers.
     Returns (last_token_logits (B,vocab), new_caches).
     """
     x, positions = T.embed_inputs(params, cfg, tokens, mm_embeds)
@@ -109,6 +116,9 @@ def prefill_forward(params, cfg: ModelConfig, tokens, caches,
     elif lengths is not None:
         idx = jnp.arange(x.shape[1], dtype=jnp.int32)[None]
         positions = jnp.where(idx < lengths[:, None], idx, -1)
+    if mm_feats is not None:
+        # padded/invalid positions are -1, hence rel < 0 -> untouched
+        x = T.scatter_mm_features(x, positions, mm_feats, mm_start)
     enc_out = None
     if cfg.encoder is not None:
         enc_out = T.run_encoder(params, cfg, enc_frames)

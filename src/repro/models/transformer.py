@@ -186,6 +186,29 @@ def embed_inputs(params, cfg: ModelConfig, tokens,
     return shard(x, "batch", None, "act_embed"), positions
 
 
+def scatter_mm_features(x, positions, mm_feats, mm_start):
+    """Overwrite image-token positions of the embedding stream with
+    projected multimodal features (the Encode-stage E->P hand-off).
+
+    x: (B, S, d) token embeddings for this (possibly suffix) chunk;
+    positions: (B, S) ABSOLUTE positions; mm_feats: (B, n_mm, d) already
+    projected to d_model; mm_start: scalar/(B,) absolute position of the
+    first image token. Positions outside [mm_start, mm_start + n_mm) keep
+    their text embeddings, so a chunk that only overlaps part of the image
+    run scatters exactly its slice.
+    """
+    n_mm = mm_feats.shape[1]
+    start = jnp.asarray(mm_start, jnp.int32)
+    if start.ndim == 0:
+        start = jnp.broadcast_to(start, (x.shape[0],))
+    rel = positions - start[:, None]                  # (B, S)
+    valid = (rel >= 0) & (rel < n_mm)
+    gathered = jnp.take_along_axis(
+        mm_feats.astype(x.dtype),
+        jnp.clip(rel, 0, n_mm - 1)[..., None], axis=1)
+    return jnp.where(valid[..., None], gathered, x)
+
+
 def lm_logits(params, cfg: ModelConfig, h):
     w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     return shard(h @ w.astype(h.dtype), "batch", None, "act_vocab")

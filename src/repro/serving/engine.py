@@ -77,9 +77,10 @@ from repro.serving.kv_pool import (PagePool, PagedKVPayload, PoolExhausted,
                                    SwapHandle)
 from repro.serving.prefix_cache import MatchResult, PrefixCache
 from repro.serving.request import Request
-from repro.serving.steps import (make_decode_fn, make_insert_fn,
-                                 make_page_copy_fn, make_page_gather_fn,
-                                 make_page_scatter_fn, make_paged_insert_fn,
+from repro.serving.steps import (make_decode_fn, make_encode_fn,
+                                 make_insert_fn, make_page_copy_fn,
+                                 make_page_gather_fn, make_page_scatter_fn,
+                                 make_paged_insert_fn,
                                  make_pool_page_copy_fn, make_prefill_fn)
 
 
@@ -151,6 +152,12 @@ class Engine:
                     f"prefill_chunk {prefill_chunk} must be a positive "
                     f"multiple of page {page_size}")
         self._decode = make_decode_fn(cfg, temperature)
+        # encode-inline baseline for run_request: the SAME jitted
+        # frontend-projector forward the Encode stage runs, so the
+        # monolithic path is bit-identical to disaggregated E->P->D
+        self._encode_inline = (make_encode_fn(cfg)
+                               if cfg.frontend is not None
+                               and cfg.encoder is None else None)
         if paged:
             if max_len % page_size:
                 raise ValueError(
@@ -632,23 +639,45 @@ class Engine:
 
     # -- stages --------------------------------------------------------------
     def prefill_request(self, req: Request, mm_embeds=None,
-                        enc_frames=None):
+                        enc_frames=None, mm_feats=None, mm_key=None):
         """Run Prefill for one request (batch=1). Returns (first_token,
         payload) — the payload is the P->D handoff unit: the prefilled
         cache pytree (dense) or a PagedKVPayload naming pool pages.
 
         With the prefix cache enabled, text-only prompts reuse the
-        longest cached prefix and compute only the suffix."""
+        longest cached prefix and compute only the suffix.
+
+        Multimodal inputs arrive one of two ways:
+        * ``mm_embeds`` — RAW frontend embeddings, projected and
+          prepended inside the forward (the legacy fused path; falls
+          back to monolithic prefill).
+        * ``mm_feats`` + ``mm_key`` — the Encode-stage hand-off:
+          features ALREADY projected to d_model (from the MM Store),
+          scattered into the embedding stream at image-token positions
+          [req.mm_pos, req.mm_pos + n_mm). ``mm_key`` (the content
+          hash) extends the radix prefix-cache key with a pseudo-token
+          run, so identical image+prompt pairs compose MM Store dedup
+          with KV reuse — and composes with chunked prefill: text
+          chunks proceed normally, the chunk overlapping the image run
+          scatters exactly its slice. ``mm_feats=None`` with ``mm_key``
+          set means the caller skipped the encode forward because the
+          prefix cache covers the whole image run (verified here).
+        """
         with self.tracer.span("prefill", track=self.name,
                               request_id=req.request_id,
                               tokens=len(req.prompt_tokens)):
-            return self._prefill_request(req, mm_embeds, enc_frames)
+            return self._prefill_request(req, mm_embeds, enc_frames,
+                                         mm_feats, mm_key)
 
     def _prefill_request(self, req: Request, mm_embeds=None,
-                         enc_frames=None):
+                         enc_frames=None, mm_feats=None, mm_key=None):
         cfg = self.cfg
         n_mm = 0
-        if mm_embeds is not None and cfg.encoder is None:
+        if mm_feats is not None:
+            n_mm = mm_feats.shape[1]
+        elif mm_key is not None:
+            n_mm = req.mm_tokens
+        elif mm_embeds is not None and cfg.encoder is None:
             n_mm = mm_embeds.shape[1]
         toks = np.asarray(req.prompt_tokens, np.int32)[None]
         pad = self.max_len - n_mm - toks.shape[1]
@@ -656,6 +685,28 @@ class Engine:
             raise ValueError(
                 f"prompt ({toks.shape[1]}+{n_mm}) exceeds max_len {self.max_len}")
         n_tokens = len(req.prompt_tokens) + n_mm
+
+        scatter = mm_feats is not None or mm_key is not None
+        if ((self.chunked_prefill or self.prefix_cache is not None)
+                and mm_embeds is None and enc_frames is None
+                and (n_mm == 0 or scatter) and self.paged):
+            return self._prefill_chunked(req, n_tokens, mm_feats, mm_key)
+        if mm_key is not None and mm_feats is None:
+            raise ValueError(
+                "encode was skipped (mm_feats=None) but this engine has "
+                "no prefix cache to supply the image run's KV")
+
+        mm_start = None
+        if scatter:
+            # feed placeholder 0-tokens at image positions; the scatter
+            # overwrites their embeddings with the projected features
+            p = list(req.prompt_tokens)
+            toks = np.asarray(p[:req.mm_pos] + [0] * n_mm + p[req.mm_pos:],
+                              np.int32)[None]
+            mm_start = jnp.asarray(req.mm_pos, jnp.int32)
+        # pad the TEXT width: a scatter-path toks already contains the
+        # n_mm placeholders, a prepend-path toks grows them inside the
+        # forward — either way the model sees max_len positions.
         lengths = jnp.asarray([n_tokens], jnp.int32)
         if not self.paged:
             toks = np.pad(toks, ((0, 0), (0, pad)))
@@ -663,14 +714,10 @@ class Engine:
                                  kv_dtype=self.kv_dtype)
             logits, caches = self._prefill(self.params, jnp.asarray(toks),
                                            lengths, caches, mm_embeds,
-                                           enc_frames)
+                                           enc_frames, mm_feats, mm_start)
             first = int(jnp.argmax(logits[0]))
             self._count_prefill(n_tokens, n_tokens)
             return first, caches
-
-        if ((self.chunked_prefill or self.prefix_cache is not None)
-                and n_mm == 0 and mm_embeds is None and enc_frames is None):
-            return self._prefill_chunked(req, n_tokens)
 
         # ---- paged: write KV straight into this engine's pool pages ----
         toks = np.pad(toks, ((0, 0), (0, pad)))
@@ -682,7 +729,8 @@ class Engine:
                    "cross": side["cross"], "len": side["len"],
                    "pages": jnp.asarray(row)}
         logits, new = self._prefill(self.params, jnp.asarray(toks), lengths,
-                                    pcaches, mm_embeds, enc_frames)
+                                    pcaches, mm_embeds, enc_frames,
+                                    mm_feats, mm_start)
         self.caches["attn"] = new["attn"]      # pool pages updated in place
         first = int(jnp.argmax(logits[0]))
         self._count_prefill(n_tokens, n_tokens)
@@ -693,7 +741,8 @@ class Engine:
             kv_nbytes=len(ids) * self._attn_kv_nbytes(self.caches["attn"]))
         return first, payload
 
-    def _prefill_chunked(self, req: Request, n_tokens: int):
+    def _prefill_chunked(self, req: Request, n_tokens: int,
+                         mm_feats=None, mm_key=None):
         """Chunked prefill (text-only, batch 1): compute the prompt in
         fixed windows of ``prefill_chunk`` tokens. Chunk *k* allocates
         only its own pages, scatters its KV into the pool, and attends
@@ -717,14 +766,44 @@ class Engine:
         page = self.page_size
         C = self.prefill_chunk if self.chunked_prefill else self.max_len
         width = self.max_len // page
+        # multimodal: the prefix-cache KEY splices a hash-derived
+        # pseudo-token run over the image segment — (mm-content-hash,
+        # token-run) — so identical image+prompt pairs match; the FEED
+        # tokens carry placeholder 0s there (their embeddings are
+        # overwritten by the mm_feats scatter, never looked at).
+        p_toks = list(req.prompt_tokens)
+        if mm_key is not None:
+            n_mm = n_tokens - len(p_toks)
+            key_tokens = (p_toks[:req.mm_pos] + FE.mm_key_run(mm_key, n_mm)
+                          + p_toks[req.mm_pos:])
+            feed_tokens = (p_toks[:req.mm_pos] + [0] * n_mm
+                           + p_toks[req.mm_pos:])
+        else:
+            key_tokens = feed_tokens = p_toks
         if self.prefix_cache is not None:
             # cap at n-1 so at least one token is computed (need logits)
             with self.tracer.span("prefix.match", track=self.name,
                                   request_id=req.request_id):
-                m = self.prefix_cache.match_and_ref(req.prompt_tokens,
+                m = self.prefix_cache.match_and_ref(key_tokens,
                                                     cap=n_tokens - 1)
         else:
             m = MatchResult()
+        if mm_key is not None and mm_feats is None \
+                and m.n_tokens < req.mm_pos + (n_tokens - len(p_toks)):
+            # the caller skipped the encode forward on the promise that
+            # the cached prefix covers the whole image run; it must —
+            # there are no features to scatter for the uncovered slice
+            self.pool.unref(m.page_ids)
+            if m.cow_src is not None:
+                self.pool.unref([m.cow_src])
+            raise ValueError(
+                f"encode skipped but cached prefix covers only "
+                f"{m.n_tokens} tokens of an image run ending at "
+                f"{req.mm_pos + n_tokens - len(p_toks)}")
+        mm_args = ()
+        if mm_feats is not None:
+            mm_args = (jnp.asarray(mm_feats),
+                       jnp.asarray(req.mm_pos, jnp.int32))
         n_shared = m.n_full_pages
         cow_held = m.cow_src is not None
         row = np.zeros((1, width), np.int32)
@@ -758,7 +837,7 @@ class Engine:
                     row[0, pos // page:pos // page + len(ids)] = ids
                     sfx = np.zeros((1, win), np.int32)
                     sfx[0, done - pos:end - pos] = \
-                        req.prompt_tokens[done:end]
+                        feed_tokens[done:end]
                     side = self._side_caches()
                     pcaches = {"attn": self.caches["attn"],
                                "ssm": side["ssm"], "cross": side["cross"],
@@ -770,7 +849,7 @@ class Engine:
                         self.params, jnp.asarray(sfx),
                         jnp.asarray([end], jnp.int32), pcaches,
                         jnp.asarray(done, jnp.int32),
-                        jnp.asarray(pos, jnp.int32))
+                        jnp.asarray(pos, jnp.int32), *mm_args)
                     self.caches["attn"] = new["attn"]
                 chunks.append((end - done, len(ids)))
                 done = end
@@ -789,7 +868,7 @@ class Engine:
         n_pages = n_shared + sum(len(ids) for ids in held)
         ids = np.asarray(row[0, :n_pages], np.int32)
         if self.prefix_cache is not None:
-            self.prefix_cache.insert(req.prompt_tokens, ids)
+            self.prefix_cache.insert(key_tokens, ids)
         self._count_prefill(n_tokens, n_tokens - m.n_tokens)
         payload = PagedKVPayload(
             source=self, page_ids=ids, n_tokens=n_tokens,
@@ -968,9 +1047,15 @@ class Engine:
 
     # -- monolithic convenience (the vLLM-style baseline) ---------------------
     def run_request(self, req: Request) -> List[int]:
-        """Serial E->P->D for one request on this single engine."""
+        """Serial E->P->D for one request on this single engine. VLM
+        requests run encode-inline-with-prefill: the frontend forward
+        happens here, serialized before prefill, through the same jitted
+        projector the Encode stage uses — so greedy outputs match the
+        disaggregated path bit-for-bit."""
         mm = None
         enc = None
+        mm_feats = None
+        mm_key = None
         cfg = self.cfg
         if req.is_multimodal and cfg.frontend is not None:
             feats = FE.stub_embeddings(cfg, req.mm_payload,
@@ -978,8 +1063,10 @@ class Engine:
             if cfg.encoder is not None:
                 enc = feats[None]
             else:
-                mm = feats[None]
-        first, caches = self.prefill_request(req, mm, enc)
+                mm_key = FE.content_hash(req.mm_payload)
+                mm_feats = np.asarray(
+                    self._encode_inline(self.params, feats))[None]
+        first, caches = self.prefill_request(req, mm, enc, mm_feats, mm_key)
         self.insert(req, caches, first)
         while any(s is req for s in self.slots):
             self.decode_step()

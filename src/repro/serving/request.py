@@ -16,6 +16,10 @@ class Request:
     # None => text-only request (takes the P-D path, paper §3.4)
     mm_payload: Optional[bytes] = None
     mm_tokens: int = 0                  # vision/audio token count
+    # position of the image run within the combined sequence: the first
+    # mm_pos entries of prompt_tokens precede the image tokens, the rest
+    # follow (0 = image-first, the legacy prepend ordering)
+    mm_pos: int = 0
     eos_token: int = -1                 # -1: never stop early
     # preemption: higher priority is preempted later; killed marks a
     # request dropped by the no-preemption OOM baseline; n_preempts

@@ -48,10 +48,11 @@ def make_prefill_fn(cfg: ModelConfig, donate_caches: bool = False,
 
         @functools.partial(jax.jit, donate_argnums=(3,))
         def prefill_suffix_fn(params, tokens, lengths, caches, prefix_len,
-                              pos_base):
+                              pos_base, mm_feats=None, mm_start=None):
             logits, new_caches = prefill_forward(
                 params, cfg, tokens, caches, lengths=lengths,
-                prefix_len=prefix_len, pos_base=pos_base)
+                prefix_len=prefix_len, pos_base=pos_base,
+                mm_feats=mm_feats, mm_start=mm_start)
             return logits, new_caches
 
         return prefill_suffix_fn
@@ -59,13 +60,29 @@ def make_prefill_fn(cfg: ModelConfig, donate_caches: bool = False,
     @functools.partial(jax.jit,
                        donate_argnums=(3,) if donate_caches else ())
     def prefill_fn(params, tokens, lengths, caches, mm_embeds=None,
-                   enc_frames=None):
+                   enc_frames=None, mm_feats=None, mm_start=None):
         logits, new_caches = prefill_forward(
             params, cfg, tokens, caches, lengths=lengths,
-            mm_embeds=mm_embeds, enc_frames=enc_frames)
+            mm_embeds=mm_embeds, enc_frames=enc_frames,
+            mm_feats=mm_feats, mm_start=mm_start)
         return logits, new_caches
 
     return prefill_fn
+
+
+def make_encode_fn(cfg: ModelConfig):
+    """Jitted Encode-stage forward: stub patch/frame embeddings through
+    the real learned projector -> d_model-wide feature tensor, the E->P
+    payload landed in the MM Store. Float32 output so store round-trips
+    (and recompute on the Prefill side) stay bit-identical."""
+
+    @jax.jit
+    def encode_fn(params, patches):
+        feats = patches.astype(params["projector"].dtype) \
+            @ params["projector"]
+        return feats.astype(jnp.float32)
+
+    return encode_fn
 
 
 def make_decode_fn(cfg: ModelConfig, temperature: float = 0.0):
