@@ -45,6 +45,11 @@ def main() -> None:
         from benchmarks.chunked_prefill_bench import bench_chunked_prefill
         for row in bench_chunked_prefill():
             print(row)
+    if only is None or "batching" in only:
+        from benchmarks.continuous_batching_bench import \
+            bench_continuous_batching
+        for row in bench_continuous_batching():
+            print(row)
     if only is None or "preempt" in only:
         from benchmarks.preemption_bench import bench_preemption
         for row in bench_preemption():

@@ -29,10 +29,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.batching import (IterationScheduler, PrefillJob,
+                                 StreamTimeline)
 from repro.core.costmodel import CostModel, Hardware, V5E
-from repro.core.faults import (DEFAULT_RETRY, NO_RETRY, SITE_DECODE_CRASH,
+from repro.core.deployment import Deployment, InstanceSpec
+from repro.core.faults import (DEFAULT_RETRY, NO_RETRY, NoFreeSlot,
+                               SITE_DECODE_CRASH,
                                SITE_STORE_FETCH, FaultInjector, FaultPlan,
                                InstanceDown, RetryPolicy, TransferError)
+from repro.core.scheduler import Router
 from repro.core.ep_prefetch import EPPrefetcher
 from repro.core.events import EventLoop
 from repro.core.kv_transfer import (TransferPlan, emit_spans,
@@ -218,6 +223,18 @@ class EPDCluster:
         # crash-harvested requests waiting for re-admission: (request,
         # the decode-input token the resumed slot must feed next)
         self._reroute_queue: List[Request] = []
+        # modeled stream clock: enable_timeline() attaches a FUSED clock
+        # to the serial driver (one device, stages serialize);
+        # run_continuous builds its own per-stage StreamTimeline. Both
+        # charge the same CostModel durations, so serial vs continuous
+        # makespans compare apples-to-apples.
+        self.timeline: Optional[StreamTimeline] = None
+        self.continuous_timeline: Optional[StreamTimeline] = None
+        self.continuous_scheduler: Optional[IterationScheduler] = None
+        # ground-truth Router (continuous mode): built over the REAL
+        # engine names and fed chunk-granular occupancy as chunks
+        # actually execute, not callback estimates
+        self.router: Optional[Router] = None
 
     # ---- decode-instance topology ----
     @property
@@ -267,6 +284,28 @@ class EPDCluster:
         self.acc.sync()
         return self.acc.report()
 
+    # ---- modeled stream clock (serial baseline) ----
+    def enable_timeline(self) -> StreamTimeline:
+        """Attach a FUSED modeled clock to the serial driver: every
+        stage charge serializes onto one stream, exactly how the serial
+        chunk loop occupies a single python thread. The continuous
+        benchmark divides its per-stage makespan by this baseline."""
+        self.timeline = StreamTimeline(fused=True)
+        return self.timeline
+
+    def _modeled_prefill_times(self, req: Request, caches) -> List[float]:
+        """Per-chunk modeled prefill durations for one finished payload
+        (one entry for a monolithic prefill) — the same CostModel calls
+        the transfer planner and the continuous scheduler charge."""
+        cached = getattr(caches, "cached_tokens", 0)
+        chunks = getattr(caches, "chunks", None)
+        if chunks:
+            return self.cost.chunk_prefill_times(
+                req.total_prompt_len, [t for t, _ in chunks],
+                cached_prefix=cached)
+        return [self.cost.prefill_time(req.total_prompt_len,
+                                       cached_prefix=cached)]
+
     # ---- Encode stage ----
     def _pick_encode(self) -> EncodeEngine:
         eng = self.encode_engines[self._next_encode
@@ -308,7 +347,10 @@ class EPDCluster:
             return key
         with self.tracer.span("encode", track=eng.name,
                               request_id=req.request_id):
-            eng.encode_request(req)
+            _, ran = eng.dispatch(req)
+        if self.timeline is not None and ran:
+            self.timeline.charge_encode(
+                self.cost.encode_time(req.mm_tokens))
         return key
 
     # ---- E->P hand-off accounting (overlap arms) ----
@@ -348,6 +390,8 @@ class EPDCluster:
         self.acc.sync()
         t0 = self.acc.now
         self.acc.advance(extra, req.request_id, "transfer")
+        if self.timeline is not None and extra > 0:
+            self.timeline.charge_encode(extra)
         if self.tracer.enabled and extra > 0:
             self.tracer.add("ep.prefetch", t0, self.acc.now, track="store",
                             request_id=req.request_id,
@@ -407,7 +451,7 @@ class EPDCluster:
 
     # ---- P->D transfer + Decode import ----
     def transfer_and_insert(self, req: Request, caches, first: int,
-                            append_token: bool = True) -> None:
+                            append_token: bool = True) -> Engine:
         # paged payloads already carry their page-granular byte count;
         # dense payloads are measured from the actual arrays.
         nbytes = getattr(caches, "kv_nbytes", None)
@@ -480,6 +524,9 @@ class EPDCluster:
         self.acc.mark_first_token(req.request_id)
         self.acc.set_state(req.request_id, "compute")
         self.report.kv_plans.append(p)
+        if self.timeline is not None:
+            self.timeline.charge_decode(max(0.0, p.exposed_latency))
+        return engine
 
     # ---- full pipeline ----
     def submit(self, req: Request) -> bool:
@@ -499,6 +546,9 @@ class EPDCluster:
         self._unpark_queued(req)
         key = self.encode(req)
         first, caches = self.prefill(req, key)
+        if self.timeline is not None:
+            for dt in self._modeled_prefill_times(req, caches):
+                self.timeline.charge_prefill(dt)
         try:
             self.transfer_and_insert(req, caches, first)
         except PoolExhausted:
@@ -614,6 +664,12 @@ class EPDCluster:
             self._maybe_crash(steps)
             for eng in live():
                 if eng.n_active or eng.preempted:
+                    if self.timeline is not None and eng.n_active:
+                        batch = eng.n_active
+                        kv = sum(r.total_prompt_len + len(r.output_tokens)
+                                 for r in eng.slots if r is not None) / batch
+                        self.timeline.charge_decode(
+                            self.cost.decode_step_time(batch, kv))
                     for r, _t, d in eng.decode_step():
                         if d:
                             done.append(r)
@@ -648,6 +704,12 @@ class EPDCluster:
                 if not self.submit(self._pending.pop(0)):
                     break                  # denied: wait for decode to drain
             steps += 1
+        self._finalize(done)
+        return done
+
+    def _finalize(self, done: List[Request]) -> None:
+        """Close the run out: sync accounting, drain swap notes, fold
+        engine counters into the report (shared by both drivers)."""
         self.acc.sync()
         for eng in self.decode_engines:
             eng.drain_notes()
@@ -664,4 +726,312 @@ class EPDCluster:
         if self.prefetcher.records:
             self.metrics.gauge("ep_overlap_ratio").set(
                 self.prefetcher.mean_overlap_ratio)
+
+    # ---- continuous batching: the iteration-level cluster driver ----
+    def _submit_continuous(self, req: Request, sched: IterationScheduler,
+                           tl: StreamTimeline, router: Router) -> PrefillJob:
+        """Fold the Encode dispatch into the serving loop and queue one
+        prefill job. The async arm's E->P feature arrival becomes a REAL
+        dependency edge: ``feature_ready_at`` gates only the chunk whose
+        window overlaps the image run, so pre-image text chunks start
+        while the feature is still in flight; the sync arm gates the
+        whole job (``ready_at``); inline charges the encode forward on
+        the prefill stream and has no link to wait on."""
+        pe = self.prefill_engine
+        ready_at = 0.0
+        feature_ready_at = 0.0
+        meta: Dict[str, Any] = {}
+        key = None
+        if req.is_multimodal and self.encode_engines:
+            eng = self._pick_encode()
+            key = FE.content_hash(req.mm_payload)
+            if self._can_skip_encode(req, key):
+                # full-run radix hit: no forward, no features, no barrier
+                self.metrics.counter("encode_skips_total").inc()
+            else:
+                with self.tracer.span("encode", track=eng.name,
+                                      request_id=req.request_id):
+                    _, ran = eng.dispatch(req)
+                feats = self.store.get(key, record=False)
+                meta["mm_feats"] = jnp.asarray(feats)[None]
+                t_enc = self.cost.encode_time(req.mm_tokens) if ran else 0.0
+                if self.ep_overlap == "inline":
+                    if t_enc:
+                        tl.charge_prefill(t_enc)
+                else:
+                    enc_done = (tl.charge_encode(t_enc) if t_enc
+                                else tl.t_encode)
+                    router.on_busy_until(eng.name, enc_done)
+                    nbytes = self.cost.feature_bytes(req.mm_tokens)
+                    arrival = (enc_done + self.cost.dispatch_latency(nbytes)
+                               + self.cost.feature_transfer_time(nbytes))
+                    if self.ep_overlap == "async":
+                        feature_ready_at = arrival
+                    else:
+                        ready_at = arrival
+                    # announce->ready bookkeeping (Table-3 overlap ratio)
+                    self.prefetcher.notify(req.request_id, key,
+                                           req.mm_tokens,
+                                           on_ready=lambda _rc: None)
+                    self._ep_loop.run()
+        meta["mm_key"] = key
+        n_mm = req.mm_tokens if key is not None else 0
+        job = PrefillJob(
+            req=req, n_tokens=len(req.prompt_tokens) + n_mm,
+            chunk=pe.prefill_chunk if pe.chunked_prefill else pe.max_len,
+            ready_at=ready_at, feature_ready_at=feature_ready_at)
+        job.meta.update(meta)
+        self._park_queued(req)
+        router.on_enqueue(pe.name, job.n_tokens, rid=str(req.request_id))
+        return sched.submit(job)
+
+    def _restart_one_prefill(self, sched: IterationScheduler) -> bool:
+        """Pool-deadlock recovery: every schedulable chunk stalled on
+        the allocator and nothing else can free pages. Abort the
+        YOUNGEST in-flight task (least work lost; the prefix cache, when
+        on, keeps its finished chunks cheap to redo) and send its job
+        back to the waiting queue. The Router ledger self-corrects: the
+        restarted task's re-retirements are capped at what the request
+        still owes."""
+        for job in reversed(sched.live):
+            if job.task is not None and not job.task.closed:
+                job.task.abort()
+                job.task = None
+                job.meta.pop("chunk_times", None)
+                sched.live.remove(job)
+                sched.waiting.append(job)
+                sched.note_stall(job, "restart")
+                self._park_queued(job.req)
+                return True
+        return False
+
+    def _advance_chunk(self, job: PrefillJob, sched: IterationScheduler,
+                       tl: StreamTimeline, router: Router) -> bool:
+        """Run one chunk of one scheduled job: lazy task creation (the
+        prefix match retires cached tokens immediately), feature supply
+        once the barrier chunk is reached, then the jitted suffix
+        prefill — with chunk-granular occupancy reported to the Router
+        as the chunk ACTUALLY executes (ground truth, not callbacks)."""
+        pname = self.prefill_engine.name
+        rid = str(job.req.request_id)
+        if job.task is None:
+            feats = job.meta.get("mm_feats")
+            job.task = self.prefill_engine.start_prefill_task(
+                job.req, None, job.meta.get("mm_key"),
+                defer_features=feats is not None)
+            self._unpark_queued(job.req)
+            # cached-prefix tokens retire at task creation; computed
+            # tokens retire per executed chunk below — conservation:
+            # cached + sum(chunks) == the on_enqueue total
+            router.on_start(pname, job.task.done, rid=rid)
+            job.meta["chunk_times"] = list(self.cost.chunk_prefill_times(
+                job.n_tokens, job.task.planned_chunk_tokens(),
+                cached_prefix=job.task.done))
+        task = job.task
+        needed_feats = task.needs_features_next()
+        if needed_feats and job.meta.get("mm_feats") is not None:
+            task.supply_features(job.meta["mm_feats"])
+        try:
+            computed = task.run_chunk()
+        except PoolExhausted:
+            # allocator raised before any mutation: stall + retry after
+            # decode drain / admission frees prefill pool pages
+            sched.note_stall(job, "pool")
+            return False
+        except BaseException:
+            task.abort()
+            raise
+        times = job.meta["chunk_times"]
+        dur = times.pop(0) if times else 0.0
+        nb = job.ready_at
+        if needed_feats:
+            nb = max(nb, job.feature_ready_at)
+        t_done = tl.charge_prefill(dur, not_before=nb)
+        router.on_prefill_progress(pname, computed, rid=rid)
+        router.on_busy_until(pname, t_done)
+        if task.finished:
+            job.result = task.finish()
+            job.meta["prefill_done"] = t_done
+            sched.mark_ready(job)
+        return True
+
+    def _decode_iteration(self, done: List[Request], tl: StreamTimeline,
+                          router: Router) -> bool:
+        """One lock-step decode iteration across every live instance —
+        instances are separate devices, so the modeled stream advances
+        by the SLOWEST instance's step, not the sum."""
+        durs = []
+        stepped = False
+        for i in self.live_decode_indices():
+            eng = self.decode_engines[i]
+            if not (eng.n_active or eng.preempted):
+                continue
+            stepped = True
+            if eng.n_active:
+                batch = eng.n_active
+                kv = sum(r.total_prompt_len + len(r.output_tokens)
+                         for r in eng.slots if r is not None) / batch
+                durs.append(self.cost.decode_step_time(batch, kv))
+            for r, _t, d in eng.decode_step():
+                if d:
+                    done.append(r)
+                    router.on_decode_leave(eng.name)
+                    self.acc.close(r.request_id,
+                                   n_output_tokens=len(r.output_tokens))
+            for pr in eng.preempted:
+                self.acc.set_state(pr.req.request_id, "queue")
+            for r in eng.slots:
+                if r is not None:
+                    self.acc.set_state(r.request_id, "compute")
+            while eng.lost:
+                lost = eng.lost.pop(0)
+                self.report.lost.append(lost)
+                self.acc.close(lost.request_id)
+        if durs:
+            tl.charge_decode(max(durs))
+        return stepped
+
+    def run_continuous(self, reqs: List[Request], *,
+                       max_steps: int = 100_000,
+                       max_live_prefills: Optional[int] = None
+                       ) -> List[Request]:
+        """Serve ``reqs`` with iteration-level (continuous) batching:
+        every device step executes one scheduler-produced
+        :class:`BatchPlan` — ready prefill chunks from DIFFERENT
+        requests interleave on the prefill stream, finished prefills
+        admit into free decode slots (evicting via the engine's
+        ``pick_preemption_victim`` path under pool pressure), and all
+        active decodes advance lock-step — while a per-stage
+        :class:`StreamTimeline` tracks the modeled makespan and a
+        ground-truth :class:`Router` sees chunk-granular occupancy.
+        Greedy outputs are bit-identical to the serial ``submit`` +
+        ``run_until_done`` path: both drivers execute the same
+        ``PrefillTask`` chunk sequence and the same jitted forwards."""
+        if self.faults is not None:
+            raise ValueError(
+                "run_continuous does not compose with fault injection "
+                "yet — run faults through submit()/run_until_done() "
+                "(see ROADMAP follow-ups)")
+        if self.cfg.encoder is not None and any(r.is_multimodal
+                                                for r in reqs):
+            raise ValueError(
+                "continuous batching serves scatter-path VLMs only: "
+                "encoder-decoder (whisper-class) prefill cannot chunk")
+        pe = self.prefill_engine
+        tl = StreamTimeline()
+        self.continuous_timeline = tl
+        specs = [InstanceSpec(e.name, ("E",)) for e in self.encode_engines]
+        specs.append(InstanceSpec(pe.name, ("P",)))
+        specs += [InstanceSpec(e.name, ("D",)) for e in self.decode_engines]
+        router = Router(Deployment("continuous", tuple(specs), len(specs)))
+        if pe.prefix_cache is not None:
+            router.register_prefix_cache(pe.name, pe.prefix_cache)
+        self.router = router
+        if max_live_prefills is None:
+            # size the live window to what the prefill pool can actually
+            # hold in-flight at once (worst case: every live task grows
+            # to max_len) — interleaving more would only stall on alloc
+            per_req = max(1, pe.max_len // pe.page_size)
+            max_live_prefills = min(
+                4, max(1, (pe.pool.n_pages - 1) // per_req))
+        sched = IterationScheduler(max_live_prefills=max_live_prefills)
+        # the engine's page_holders audits scheduler-held payloads
+        # (ready-but-unadmitted prefills) through this reference; the
+        # cluster-level handle lets benches/tests read step and stall
+        # counts after the drain
+        pe.scheduler = sched
+        self.continuous_scheduler = sched
+        for req in reqs:
+            self.acc.open(req.request_id)
+            self._submit_continuous(req, sched, tl, router)
+        done: List[Request] = []
+        steps = 0
+        while (sched.has_work
+               or any(self.decode_engines[i].n_active
+                      or self.decode_engines[i].preempted
+                      for i in self.live_decode_indices())):
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError(
+                    f"continuous drain made no progress in {max_steps} "
+                    f"steps (stalls: {sched.stall_counts})")
+            free = sum(len(self.decode_engines[i].free_slots())
+                       for i in self.live_decode_indices())
+            active = sum(self.decode_engines[i].n_active
+                         + len(self.decode_engines[i].preempted)
+                         for i in self.live_decode_indices())
+            plan = sched.plan(now=tl.t_prefill, free_slots=free,
+                              active_decode=active)
+            progressed = 0
+            n_admitted = n_chunked = 0
+            with self.tracer.span("sched.step", track="router",
+                                  step=plan.step,
+                                  n_chunks=len(plan.chunks),
+                                  n_admit=len(plan.admit)):
+                for job in plan.admit:
+                    first, payload = job.result
+                    try:
+                        engine = self.transfer_and_insert(
+                            job.req, payload, first)
+                    except (NoFreeSlot, PoolExhausted):
+                        # insert raises before any mutation; the payload
+                        # stays with the job for the next attempt
+                        self.report.admission_denials += 1
+                        sched.requeue_ready(job)
+                        continue
+                    p = self.report.kv_plans[-1]
+                    # KV-transfer exposure is handshake round-trip
+                    # latency, not link occupancy (wire bytes move in
+                    # microseconds): it gates THIS request's decode
+                    # join but does not keep the Decode device busy.
+                    # The serial driver blocks on each transfer, so the
+                    # fused baseline still pays it as device time.
+                    tl.charge_decode(
+                        0.0,
+                        not_before=job.meta.get("prefill_done", 0.0)
+                        + max(0.0, p.exposed_latency))
+                    router.on_decode_join(engine.name)
+                    n_admitted += 1
+                    progressed += 1
+                for job in plan.chunks:
+                    if self._advance_chunk(job, sched, tl, router):
+                        n_chunked += 1
+                        progressed += 1
+                decoded = plan.decode and self._decode_iteration(
+                    done, tl, router)
+                if decoded:
+                    progressed += 1
+            # same scheduler telemetry the fused-engine execute_plan
+            # emits, labeled on the Prefill instance driving the loop
+            M = self.metrics
+            M.counter("sched_steps_total", engine=pe.name).inc()
+            if n_chunked:
+                M.counter("sched_chunks_total",
+                          engine=pe.name).inc(n_chunked)
+            if n_admitted:
+                M.counter("sched_admissions_total",
+                          engine=pe.name).inc(n_admitted)
+            if n_chunked and (n_admitted or decoded):
+                M.counter("sched_mixed_steps_total", engine=pe.name).inc()
+            if not progressed:
+                # nothing executed: either every live job waits on a
+                # FUTURE arrival (jump the modeled clock to it), or the
+                # prefill pool is deadlocked by partial in-flight tasks
+                # (abort the youngest and requeue it)
+                t = sched.next_barrier_time()
+                if t is not None and t > tl.t_prefill:
+                    tl.t_prefill = t
+                elif not self._restart_one_prefill(sched):
+                    raise RuntimeError(
+                        f"continuous scheduler deadlock at step "
+                        f"{plan.step} (stalls: {sched.stall_counts})")
+            self.acc.sync()
+            for eng in self.decode_engines:
+                eng.drain_notes()
+            pe.drain_notes()
+            if not sched.has_prefill_work:
+                # prefill stream drained: collapse the Router's stale
+                # busy_until so the replica reads idle again
+                router.on_idle(pe.name, tl.t_prefill)
+        self._finalize(done)
         return done

@@ -89,6 +89,10 @@ class InstanceStatus:
     active_decode: int = 0         # requests in the decode batch
     pending_tokens: float = 0.0    # queued prompt tokens (work estimate)
     busy_until: float = 0.0        # latest known completion estimate
+    # per-request pending ledger: rid -> tokens still outstanding. Guards
+    # the aggregate against double-retirement when both on_start and
+    # chunk-granular on_prefill_progress report the same work.
+    pending_by_req: Dict[str, float] = field(default_factory=dict)
 
     def load(self, now: float) -> float:
         """Scalar load metric for least-loaded-first dispatch."""
@@ -153,27 +157,60 @@ class Router:
         return min(cands, key=lambda c: c.load(now))
 
     # -- status updates (called by the execution layer) --------------------------
-    def on_enqueue(self, name: str, tokens: float = 0.0) -> None:
+    def _retire(self, st: InstanceStatus, tokens: float,
+                rid: Optional[str]) -> None:
+        """Retire pending tokens, capped by the request's own ledger
+        when a ``rid`` is known: retiring more than ``rid`` ever
+        enqueued (e.g. on_start(tokens=N) followed by per-chunk
+        on_prefill_progress for the same N) cannot drag the aggregate
+        below the other requests' outstanding work."""
+        if tokens <= 0.0:
+            return
+        if rid is not None:
+            owed = st.pending_by_req.get(rid, 0.0)
+            tokens = min(tokens, owed)
+            if tokens <= 0.0:
+                return
+            owed -= tokens
+            if owed <= 1e-9:
+                st.pending_by_req.pop(rid, None)
+            else:
+                st.pending_by_req[rid] = owed
+        st.pending_tokens = max(0.0, st.pending_tokens - tokens)
+
+    def on_enqueue(self, name: str, tokens: float = 0.0,
+                   rid: Optional[str] = None) -> None:
         st = self.status[name]
         st.queue_len += 1
         st.pending_tokens += tokens
+        if rid is not None and tokens > 0.0:
+            st.pending_by_req[rid] = st.pending_by_req.get(rid, 0.0) + tokens
 
-    def on_start(self, name: str, tokens: float = 0.0) -> None:
+    def on_start(self, name: str, tokens: float = 0.0,
+                 rid: Optional[str] = None) -> None:
         st = self.status[name]
         st.queue_len = max(0, st.queue_len - 1)
-        st.pending_tokens = max(0.0, st.pending_tokens - tokens)
+        self._retire(st, tokens, rid)
 
-    def on_prefill_progress(self, name: str, tokens: float) -> None:
+    def on_prefill_progress(self, name: str, tokens: float,
+                            rid: Optional[str] = None) -> None:
         """Chunk-granular prefill occupancy: a chunked prefill retires
         its pending tokens one chunk at a time (instead of all at
         start), so the load metric tracks the work actually remaining
         on the instance mid-prefill."""
-        st = self.status[name]
-        st.pending_tokens = max(0.0, st.pending_tokens - tokens)
+        self._retire(self.status[name], tokens, rid)
 
     def on_busy_until(self, name: str, t: float) -> None:
         st = self.status[name]
         st.busy_until = max(st.busy_until, t)
+
+    def on_idle(self, name: str, now: float) -> None:
+        """An instance drained its queue at ``now``: collapse any stale
+        ``busy_until`` estimate so the load metric returns to ~0 instead
+        of biasing pick() away from an idle replica forever (busy_until
+        is otherwise only ever max'd upward)."""
+        st = self.status[name]
+        st.busy_until = min(st.busy_until, now)
 
     def on_decode_join(self, name: str) -> None:
         self.status[name].active_decode += 1

@@ -230,7 +230,8 @@ class _Instance:
     # ---- task intake ----
     def enqueue(self, stage: str, req: Request) -> None:
         self.queue.append((stage, req))
-        self.sim.router.on_enqueue(self.spec.name, req.total_prompt_len)
+        self.sim.router.on_enqueue(self.spec.name, req.total_prompt_len,
+                                   rid=str(req.request_id))
         self._kick()
 
     # ---- decode KV-capacity accounting (paged pool model) ----
@@ -294,7 +295,8 @@ class _Instance:
             stage, req = self.queue.pop(0)
             self.busy, self.running_stage = True, stage
             if stage == "E":
-                sim.router.on_start(self.spec.name, req.total_prompt_len)
+                sim.router.on_start(self.spec.name, req.total_prompt_len,
+                                    rid=str(req.request_id))
                 dur = sim.cost.encode_time(req.mm_tokens, self.spec.chips,
                                            self.spec.tp)
                 dur *= self._interference("E")
@@ -312,7 +314,8 @@ class _Instance:
                 req.t_prefill_start = loop.now
                 if chunk_toks is None:
                     sim.router.on_start(self.spec.name,
-                                        req.total_prompt_len)
+                                        req.total_prompt_len,
+                                        rid=str(req.request_id))
                     dur = sim.cost.prefill_time(
                         req.total_prompt_len, self.spec.chips,
                         self.spec.tp, cached_prefix=cached) * inter
@@ -321,7 +324,8 @@ class _Instance:
                     # chunk-granular occupancy: the cached prefix
                     # retires immediately, computed tokens retire as
                     # each chunk finishes
-                    sim.router.on_start(self.spec.name, cached)
+                    rid = str(req.request_id)
+                    sim.router.on_start(self.spec.name, cached, rid=rid)
                     times = [t * inter for t in sim.cost.chunk_prefill_times(
                         req.total_prompt_len, chunk_toks, self.spec.chips,
                         self.spec.tp, cached_prefix=cached)]
@@ -330,7 +334,8 @@ class _Instance:
                     for c, dt in zip(chunk_toks, times):
                         t_end += dt
                         loop.after(t_end, lambda c=c:
-                                   sim.router.on_prefill_progress(name, c))
+                                   sim.router.on_prefill_progress(
+                                       name, c, rid=rid))
                     dur = sum(times)
                     self._start_prefill(req, dur, cached,
                                         (chunk_toks, times))
@@ -355,6 +360,9 @@ class _Instance:
             sim.router.on_busy_until(self.spec.name, loop.now + dur)
         else:
             self.busy, self.running_stage = False, None
+            # drained: collapse the stale busy_until estimate so pick()
+            # sees this replica as idle again
+            sim.router.on_idle(self.spec.name, loop.now)
 
     def _chunk_tokens(self, req: Request, cached: float) -> Optional[list]:
         """Computed-token split of this request's prefill into fixed

@@ -23,7 +23,7 @@ stub frame tensor, un-projected.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -89,3 +89,14 @@ class EncodeEngine:
                 self.store.put(key, feats, feats.nbytes)
                 self._m_tokens.inc(feats.shape[0])
         return key
+
+    def dispatch(self, req: Request) -> Tuple[str, bool]:
+        """Iteration-loop entry point: encode ``req`` and report whether
+        the forward actually ran (``ran=False`` = store dedup hit). The
+        continuous scheduler uses ``ran`` to decide whether the E->P
+        feature barrier charges encode time or the feature is free —
+        dedup'd features carry no arrival dependency."""
+        key = FE.content_hash(req.mm_payload)
+        ran = not self.store.contains(key)
+        self.encode_request(req)
+        return key, ran

@@ -67,6 +67,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.batching import BatchPlan, IterationScheduler, PrefillJob
 from repro.core.faults import FaultInjector, NoFreeSlot, SwapLost
 from repro.core.scheduler import VictimCandidate, pick_preemption_victim
 from repro.core.telemetry import (NULL_TRACER, LatencyAccountant,
@@ -107,6 +108,246 @@ class PreemptedRequest:
     side: Dict[str, Any] = field(default_factory=dict)
     last_tok: int = 0
     t_parked: float = 0.0             # tracer clock at park (parked span)
+
+
+class PrefillTask:
+    """One request's chunked prefill as a resumable state machine.
+
+    The serial path (``Engine._prefill_chunked``) drives it to completion
+    in a tight loop; the continuous path (``Engine.step`` /
+    ``EPDCluster.run_continuous``) interleaves ``run_chunk`` calls across
+    tasks so the device stays busy between one request's chunks. Either
+    driver executes the exact same sequence of pool allocations and
+    jitted suffix-prefill calls for a given request, so greedy outputs
+    are bit-identical by construction.
+
+    Multimodal (scatter-path) requests carry the E->P feature-arrival
+    barrier as task state: a chunk whose window lies entirely before the
+    image run scatters nothing (``needs_features_next`` is False) and may
+    run before the features land; the first chunk overlapping the run
+    requires ``supply_features`` first. ``defer_features=True`` suppresses
+    the init-time encode-skip validation for exactly that case — the
+    barrier check in ``run_chunk`` enforces it instead.
+
+    Lifecycle: construct (takes the prefix-cache match refs), zero or
+    more ``run_chunk`` (each takes its own page refs; a
+    :class:`PoolExhausted` from the allocator leaves the task state
+    untouched and retryable), then exactly one of ``finish`` (refs move
+    to the returned payload) or ``abort`` (every ref unwound). In-flight
+    tasks register with the engine so ``page_holders`` audits their refs.
+    """
+
+    def __init__(self, eng: "Engine", req: Request, n_tokens: int,
+                 mm_feats=None, mm_key=None, defer_features: bool = False):
+        self.eng = eng
+        self.req = req
+        self.n_tokens = n_tokens
+        self.mm_key = mm_key
+        page = eng.page_size
+        self.page = page
+        self.C = eng.prefill_chunk if eng.chunked_prefill else eng.max_len
+        width = eng.max_len // page
+        # multimodal: the prefix-cache KEY splices a hash-derived
+        # pseudo-token run over the image segment — (mm-content-hash,
+        # token-run) — so identical image+prompt pairs match; the FEED
+        # tokens carry placeholder 0s there (their embeddings are
+        # overwritten by the mm_feats scatter, never looked at).
+        p_toks = list(req.prompt_tokens)
+        self.n_mm = n_tokens - len(p_toks) if mm_key is not None else 0
+        if mm_key is not None:
+            self.key_tokens = (p_toks[:req.mm_pos]
+                               + FE.mm_key_run(mm_key, self.n_mm)
+                               + p_toks[req.mm_pos:])
+            self.feed_tokens = (p_toks[:req.mm_pos] + [0] * self.n_mm
+                                + p_toks[req.mm_pos:])
+        else:
+            self.key_tokens = self.feed_tokens = p_toks
+        if eng.prefix_cache is not None:
+            # cap at n-1 so at least one token is computed (need logits)
+            with eng.tracer.span("prefix.match", track=eng.name,
+                                 request_id=req.request_id):
+                self.m = eng.prefix_cache.match_and_ref(self.key_tokens,
+                                                        cap=n_tokens - 1)
+        else:
+            self.m = MatchResult()
+        if (mm_key is not None and mm_feats is None and not defer_features
+                and self.m.n_tokens < req.mm_pos + self.n_mm):
+            # the caller skipped the encode forward on the promise that
+            # the cached prefix covers the whole image run; it must —
+            # there are no features to scatter for the uncovered slice
+            eng.pool.unref(self.m.page_ids)
+            if self.m.cow_src is not None:
+                eng.pool.unref([self.m.cow_src])
+            raise ValueError(
+                f"encode skipped but cached prefix covers only "
+                f"{self.m.n_tokens} tokens of an image run ending at "
+                f"{req.mm_pos + self.n_mm}")
+        self.mm_args: tuple = ()
+        if mm_feats is not None:
+            self.mm_args = (jnp.asarray(mm_feats),
+                            jnp.asarray(req.mm_pos, jnp.int32))
+        self.n_shared = self.m.n_full_pages
+        self.cow_held = self.m.cow_src is not None
+        self.row = np.zeros((1, width), np.int32)
+        self.row[0, :self.n_shared] = self.m.page_ids
+        self.chunks: List[Tuple[int, int]] = []  # (computed tokens, pages)
+        if self.n_shared:
+            self.chunks.append((0, self.n_shared))  # ready before compute
+        self.held: List[np.ndarray] = []        # fresh pages, for unwind
+        self.logits = None
+        self._new = None                        # last chunk's side caches
+        self.done = self.m.n_tokens             # tokens already in the pool
+        self.pos = self.n_shared * page         # page-aligned window start
+        self.k = 0
+        self.closed = False
+        eng._inflight_tasks.append(self)
+
+    @property
+    def finished(self) -> bool:
+        return self.pos >= self.n_tokens
+
+    @property
+    def next_chunk_tokens(self) -> int:
+        """Tokens the next ``run_chunk`` would compute (0 once finished)."""
+        return max(0, min(self.pos + self.C, self.n_tokens) - self.done)
+
+    def planned_chunk_tokens(self) -> List[int]:
+        """Computed-token split of the REMAINING chunks (deterministic
+        from the window arithmetic) — what a cost model should charge
+        per executed chunk."""
+        out, done, pos = [], self.done, self.pos
+        while pos < self.n_tokens:
+            end = min(pos + self.C, self.n_tokens)
+            out.append(end - done)
+            done = end
+            pos += -(-end // self.page) * self.page - pos
+        return out
+
+    def needs_features_next(self) -> bool:
+        """Does the next chunk's window overlap the image run with no
+        features supplied yet? True means the E->P feature-arrival
+        barrier gates this chunk: ``supply_features`` must happen first.
+        A cached prefix covering the whole run clears it for free."""
+        if self.mm_key is None or self.mm_args or not self.n_mm:
+            return False
+        if self.done >= self.req.mm_pos + self.n_mm:
+            return False
+        return min(self.pos + self.C, self.n_tokens) > self.req.mm_pos
+
+    def supply_features(self, mm_feats) -> None:
+        """Land the Encode stage's features (the barrier dependency)."""
+        self.mm_args = (jnp.asarray(mm_feats),
+                        jnp.asarray(self.req.mm_pos, jnp.int32))
+
+    def held_pages(self) -> List[int]:
+        """Every pool page this in-flight task holds a ref on (for
+        ``assert_balanced`` leak audits)."""
+        out = [int(p) for p in self.m.page_ids]
+        if self.cow_held:
+            out.append(int(self.m.cow_src))
+        for ids in self.held:
+            out.extend(int(p) for p in ids)
+        return out
+
+    def run_chunk(self) -> int:
+        """Advance one chunk window; returns the tokens computed.
+
+        A :class:`PoolExhausted` from the page allocator propagates with
+        the task state UNTOUCHED (nothing mutated yet this chunk) — the
+        scheduler stalls the job and retries after decode frees pages.
+        Any other failure must be unwound by the caller via ``abort``."""
+        eng = self.eng
+        page = self.page
+        req = self.req
+        if self.finished:
+            raise ValueError("prefill task already finished")
+        if self.needs_features_next():
+            raise ValueError(
+                f"request {req.request_id}: chunk {self.k} overlaps the "
+                f"image run at {req.mm_pos} but no features were "
+                f"supplied (feature-arrival barrier violated)")
+        end = min(self.pos + self.C, self.n_tokens)
+        with eng.tracer.span("prefill.chunk", track=eng.name,
+                             request_id=req.request_id, chunk=self.k,
+                             tokens=end - self.done):
+            win = -(-end // page) * page - self.pos  # page-aligned window
+            ids = eng._alloc_pages(-(-end // page) - self.pos // page)
+            self.held.append(ids)
+            if self.cow_held:
+                # never write a shared page: private copy, then
+                # overwrite its unmatched tail during the scatter
+                eng.caches["attn"] = eng._cow_copy(
+                    eng.caches["attn"],
+                    jnp.asarray([self.m.cow_src], jnp.int32),
+                    jnp.asarray([int(ids[0])], jnp.int32))
+                eng.pool.unref([self.m.cow_src])
+                self.cow_held = False
+            self.row[0, self.pos // page:self.pos // page + len(ids)] = ids
+            sfx = np.zeros((1, win), np.int32)
+            sfx[0, self.done - self.pos:end - self.pos] = \
+                self.feed_tokens[self.done:end]
+            side = eng._side_caches()
+            pcaches = {"attn": eng.caches["attn"],
+                       "ssm": side["ssm"], "cross": side["cross"],
+                       "len": side["len"], "pages": jnp.asarray(self.row)}
+            # lengths = this chunk's end: positions past it are
+            # dummies (masked scatter + position -1), so the window
+            # never claims tokens a later chunk will compute
+            self.logits, self._new = eng._prefill_suffix(
+                eng.params, jnp.asarray(sfx),
+                jnp.asarray([end], jnp.int32), pcaches,
+                jnp.asarray(self.done, jnp.int32),
+                jnp.asarray(self.pos, jnp.int32), *self.mm_args)
+            eng.caches["attn"] = self._new["attn"]
+        n = end - self.done
+        self.chunks.append((n, len(ids)))
+        self.done = end
+        self.pos += win
+        self.k += 1
+        return n
+
+    def finish(self):
+        """Complete the prefill: first token from the last chunk's
+        logits, radix retention, metrics — and every page ref moves to
+        the returned ``(first_token, payload)``."""
+        if self.closed:
+            raise ValueError("prefill task already closed")
+        if not self.finished:
+            raise ValueError("prefill task still has chunks to run")
+        eng = self.eng
+        first = int(jnp.argmax(self.logits[0]))
+        n_pages = self.n_shared + sum(len(ids) for ids in self.held)
+        ids = np.asarray(self.row[0, :n_pages], np.int32)
+        if eng.prefix_cache is not None:
+            eng.prefix_cache.insert(self.key_tokens, ids)
+        eng._count_prefill(self.n_tokens, self.n_tokens - self.m.n_tokens)
+        payload = PagedKVPayload(
+            source=eng, page_ids=ids, n_tokens=self.n_tokens,
+            side={"ssm": self._new["ssm"], "cross": self._new["cross"],
+                  "len": self._new["len"]},
+            kv_nbytes=len(ids) * eng._attn_kv_nbytes(eng.caches["attn"]),
+            cached_tokens=self.m.n_tokens,
+            chunks=self.chunks if eng.chunked_prefill else [])
+        self._close()
+        return first, payload
+
+    def abort(self) -> None:
+        """Unwind every ref this task took (match, CoW source, every
+        chunk's fresh pages) so an abandoned prefill leaks nothing."""
+        if self.closed:
+            return
+        eng = self.eng
+        eng.pool.unref(self.m.page_ids)
+        if self.cow_held:
+            eng.pool.unref([self.m.cow_src])
+        for ids in self.held:
+            eng.pool.unref(ids)
+        self._close()
+
+    def _close(self) -> None:
+        self.closed = True
+        if self in self.eng._inflight_tasks:
+            self.eng._inflight_tasks.remove(self)
 
 
 class Engine:
@@ -251,6 +492,18 @@ class Engine:
         # note() moves it into the "swap" component, zero-sum).
         self._pending_notes: List[Tuple[int, str, float, str]] = []
         self._decode_steps = 0
+        # iteration-level (continuous) batching: chunked prefills in
+        # flight register here so leak audits see their page refs; the
+        # scheduler is created lazily by the first submit(). The step
+        # counters back the batching-smoke observability assertions.
+        self._inflight_tasks: List[PrefillTask] = []
+        self.scheduler: Optional[IterationScheduler] = None
+        self._m_sched_steps = M.counter("sched_steps_total", engine=name)
+        self._m_sched_chunks = M.counter("sched_chunks_total", engine=name)
+        self._m_sched_admits = M.counter("sched_admissions_total",
+                                         engine=name)
+        self._m_sched_mixed = M.counter("sched_mixed_steps_total",
+                                        engine=name)
 
     # -- telemetry back-compat properties ------------------------------------
     @property
@@ -370,11 +623,18 @@ class Engine:
 
     def page_holders(self) -> List[Sequence[int]]:
         """Every holder of pool pages this engine knows about: one entry
-        per active slot plus the prefix-cache retentions (leak audits)."""
+        per active slot, the prefix-cache retentions, every in-flight
+        chunked-prefill task, and finished-but-unadmitted continuous
+        payloads (leak audits)."""
         holders: List[Sequence[int]] = [
             p for p in self._slot_pages if p is not None]
         if self.prefix_cache is not None:
             holders.append(self.prefix_cache.retained_pages())
+        holders.extend(t.held_pages() for t in self._inflight_tasks)
+        if self.scheduler is not None:
+            holders.extend(job.result[1].page_ids
+                           for job in self.scheduler.ready
+                           if job.result is not None)
         return holders
 
     def assert_no_page_leaks(self, extra_holders: Sequence = ()) -> None:
@@ -762,122 +1022,23 @@ class Engine:
         and degenerates to the monolithic suffix prefill (same trace
         bucket, same CoW/unwind protocol — one implementation to audit).
         Such payloads carry no segments, so the cluster plans their
-        transfer monolithically."""
-        page = self.page_size
-        C = self.prefill_chunk if self.chunked_prefill else self.max_len
-        width = self.max_len // page
-        # multimodal: the prefix-cache KEY splices a hash-derived
-        # pseudo-token run over the image segment — (mm-content-hash,
-        # token-run) — so identical image+prompt pairs match; the FEED
-        # tokens carry placeholder 0s there (their embeddings are
-        # overwritten by the mm_feats scatter, never looked at).
-        p_toks = list(req.prompt_tokens)
-        if mm_key is not None:
-            n_mm = n_tokens - len(p_toks)
-            key_tokens = (p_toks[:req.mm_pos] + FE.mm_key_run(mm_key, n_mm)
-                          + p_toks[req.mm_pos:])
-            feed_tokens = (p_toks[:req.mm_pos] + [0] * n_mm
-                           + p_toks[req.mm_pos:])
-        else:
-            key_tokens = feed_tokens = p_toks
-        if self.prefix_cache is not None:
-            # cap at n-1 so at least one token is computed (need logits)
-            with self.tracer.span("prefix.match", track=self.name,
-                                  request_id=req.request_id):
-                m = self.prefix_cache.match_and_ref(key_tokens,
-                                                    cap=n_tokens - 1)
-        else:
-            m = MatchResult()
-        if mm_key is not None and mm_feats is None \
-                and m.n_tokens < req.mm_pos + (n_tokens - len(p_toks)):
-            # the caller skipped the encode forward on the promise that
-            # the cached prefix covers the whole image run; it must —
-            # there are no features to scatter for the uncovered slice
-            self.pool.unref(m.page_ids)
-            if m.cow_src is not None:
-                self.pool.unref([m.cow_src])
-            raise ValueError(
-                f"encode skipped but cached prefix covers only "
-                f"{m.n_tokens} tokens of an image run ending at "
-                f"{req.mm_pos + n_tokens - len(p_toks)}")
-        mm_args = ()
-        if mm_feats is not None:
-            mm_args = (jnp.asarray(mm_feats),
-                       jnp.asarray(req.mm_pos, jnp.int32))
-        n_shared = m.n_full_pages
-        cow_held = m.cow_src is not None
-        row = np.zeros((1, width), np.int32)
-        row[0, :n_shared] = m.page_ids
-        chunks: List[Tuple[int, int]] = []      # (computed tokens, pages)
-        if n_shared:
-            chunks.append((0, n_shared))        # ready before any compute
-        held: List[np.ndarray] = []             # fresh pages, for unwind
-        logits = None
+        transfer monolithically.
+
+        Implementation: a :class:`PrefillTask` driven to completion in
+        a tight loop — the SAME state machine the iteration-level
+        scheduler advances one chunk at a time, so the serial and
+        continuous paths share one implementation to audit and are
+        bit-identical by construction."""
+        task = PrefillTask(self, req, n_tokens, mm_feats, mm_key)
         try:
-            done = m.n_tokens                   # tokens already in the pool
-            pos = n_shared * page               # page-aligned window start
-            k = 0
-            while pos < n_tokens:
-                end = min(pos + C, n_tokens)
-                with self.tracer.span("prefill.chunk", track=self.name,
-                                      request_id=req.request_id, chunk=k,
-                                      tokens=end - done):
-                    win = -(-end // page) * page - pos  # page-aligned window
-                    ids = self._alloc_pages(-(-end // page) - pos // page)
-                    held.append(ids)
-                    if cow_held:
-                        # never write a shared page: private copy, then
-                        # overwrite its unmatched tail during the scatter
-                        self.caches["attn"] = self._cow_copy(
-                            self.caches["attn"],
-                            jnp.asarray([m.cow_src], jnp.int32),
-                            jnp.asarray([int(ids[0])], jnp.int32))
-                        self.pool.unref([m.cow_src])
-                        cow_held = False
-                    row[0, pos // page:pos // page + len(ids)] = ids
-                    sfx = np.zeros((1, win), np.int32)
-                    sfx[0, done - pos:end - pos] = \
-                        feed_tokens[done:end]
-                    side = self._side_caches()
-                    pcaches = {"attn": self.caches["attn"],
-                               "ssm": side["ssm"], "cross": side["cross"],
-                               "len": side["len"], "pages": jnp.asarray(row)}
-                    # lengths = this chunk's end: positions past it are
-                    # dummies (masked scatter + position -1), so the window
-                    # never claims tokens a later chunk will compute
-                    logits, new = self._prefill_suffix(
-                        self.params, jnp.asarray(sfx),
-                        jnp.asarray([end], jnp.int32), pcaches,
-                        jnp.asarray(done, jnp.int32),
-                        jnp.asarray(pos, jnp.int32), *mm_args)
-                    self.caches["attn"] = new["attn"]
-                chunks.append((end - done, len(ids)))
-                done = end
-                pos += win
-                k += 1
+            while not task.finished:
+                task.run_chunk()
         except BaseException:
             # un-wind every ref this request took (match, CoW source,
             # every chunk's fresh pages) so a failed prefill leaks nothing
-            self.pool.unref(m.page_ids)
-            if cow_held:
-                self.pool.unref([m.cow_src])
-            for ids in held:
-                self.pool.unref(ids)
+            task.abort()
             raise
-        first = int(jnp.argmax(logits[0]))
-        n_pages = n_shared + sum(len(ids) for ids in held)
-        ids = np.asarray(row[0, :n_pages], np.int32)
-        if self.prefix_cache is not None:
-            self.prefix_cache.insert(key_tokens, ids)
-        self._count_prefill(n_tokens, n_tokens - m.n_tokens)
-        payload = PagedKVPayload(
-            source=self, page_ids=ids, n_tokens=n_tokens,
-            side={"ssm": new["ssm"], "cross": new["cross"],
-                  "len": new["len"]},
-            kv_nbytes=len(ids) * self._attn_kv_nbytes(self.caches["attn"]),
-            cached_tokens=m.n_tokens,
-            chunks=chunks if self.chunked_prefill else [])
-        return first, payload
+        return task.finish()
 
     def insert(self, req: Request, prefilled, first_token: int,
                append_token: bool = True) -> int:
@@ -1019,6 +1180,13 @@ class Engine:
     def _decode_step_inner(self) -> List[Tuple[Request, int, bool]]:
         if self.paged and self.preempted:
             self.try_resume()
+        if self.n_active == 0:
+            # idle-batch early-out: with zero active slots the jitted
+            # forward would compute only trash-page rows — skip the
+            # dispatch AND the device->host len sync entirely. (Checked
+            # after try_resume so a successful re-admission still
+            # decodes this very step.)
+            return []
         # single device->host sync per step (not per slot)
         lens = np.asarray(self.caches["len"])
         if self.paged:
@@ -1034,15 +1202,137 @@ class Engine:
             t = int(toks[i])
             self._last_tok[i] = t
             req.output_tokens.append(t)
+            # lens[i] is the PRE-step resident length: this step's KV
+            # landed at index lens[i], so the cache now holds lens[i]+1
+            # tokens and the next step would write at lens[i]+1 — done
+            # exactly when that would spill past max_len (the cache can
+            # fill to the last position, no give-away row).
             done = (t == req.eos_token or
                     len(req.output_tokens) >= req.max_new_tokens or
-                    int(lens[i]) + 1 >= self.max_len - 1)
+                    int(lens[i]) + 1 >= self.max_len)
             if done:
                 self.slots[i] = None
                 self._resume_marks.pop(req.request_id, None)
                 if self.paged:
                     self._release_slot(i)
             out.append((req, t, done))
+        return out
+
+    # -- continuous batching (iteration-level scheduling, fused PD) -----------
+    def start_prefill_task(self, req: Request, mm_feats=None, mm_key=None,
+                           defer_features: bool = False) -> PrefillTask:
+        """Create (without running) the resumable chunk state machine
+        for one request's prefill — the unit the iteration scheduler
+        advances. Requires the paged suffix-prefill path; multimodal
+        only via the scatter hand-off (``mm_feats``/``mm_key``)."""
+        if not self.paged or self._prefill_suffix is None:
+            raise ValueError(
+                "continuous batching needs a paged engine with the "
+                "suffix-prefill step (chunked_prefill / prefix_cache on "
+                "an attention-only decoder)")
+        n_mm = 0
+        if mm_feats is not None:
+            n_mm = mm_feats.shape[1]
+        elif mm_key is not None:
+            n_mm = req.mm_tokens
+        n_tokens = len(req.prompt_tokens) + n_mm
+        if n_tokens > self.max_len:
+            raise ValueError(
+                f"prompt ({n_tokens}) exceeds max_len {self.max_len}")
+        return PrefillTask(self, req, n_tokens, mm_feats, mm_key,
+                           defer_features=defer_features)
+
+    def submit(self, req: Request, *, mm_feats=None, mm_key=None,
+               ready_at: float = 0.0,
+               feature_ready_at: float = 0.0) -> PrefillJob:
+        """Queue one request for continuous (iteration-level) serving on
+        this fused engine; ``step()`` drains the queue. The scheduler is
+        created on first use — engines never pay for it otherwise."""
+        if self.scheduler is None:
+            self.scheduler = IterationScheduler()
+        n_mm = mm_feats.shape[1] if mm_feats is not None else (
+            req.mm_tokens if mm_key is not None else 0)
+        job = PrefillJob(
+            req=req, n_tokens=len(req.prompt_tokens) + n_mm,
+            chunk=self.prefill_chunk if self.chunked_prefill
+            else self.max_len,
+            ready_at=ready_at, feature_ready_at=feature_ready_at)
+        job.meta["mm_feats"] = mm_feats
+        job.meta["mm_key"] = mm_key
+        return self.scheduler.submit(job)
+
+    def step(self, now: float = 0.0) -> List[Tuple[Request, int, bool]]:
+        """One continuous-batching iteration: execute the scheduler's
+        batch plan — admit finished prefills into free decode slots,
+        advance one chunk of each scheduled prefill, then run one
+        lock-step decode over every active slot. Returns the decode
+        outputs (same shape as ``decode_step``)."""
+        sched = self.scheduler
+        if sched is None:
+            return (self.decode_step()
+                    if self.n_active or self.preempted else [])
+        plan = sched.plan(now=now, free_slots=len(self.free_slots()),
+                          active_decode=self.n_active
+                          + len(self.preempted))
+        return self.execute_plan(plan)
+
+    def execute_plan(self, plan: BatchPlan) -> List[Tuple[Request, int, bool]]:
+        """Carry out one batch plan against this fused engine. Split
+        from ``step`` so tests can drive hand-built plans."""
+        sched = self.scheduler
+        self._m_sched_steps.inc()
+        with self.tracer.span("sched.step", track=self.name,
+                              step=plan.step, n_chunks=len(plan.chunks),
+                              n_admit=len(plan.admit),
+                              batch=self.n_active):
+            for job in plan.admit:
+                first, payload = job.result
+                try:
+                    self.insert(job.req, payload, first)
+                except (NoFreeSlot, PoolExhausted):
+                    sched.requeue_ready(job)
+                    continue
+                self._m_sched_admits.inc()
+            for job in plan.chunks:
+                if job.task is None:
+                    job.task = self.start_prefill_task(
+                        job.req, job.meta.get("mm_feats"),
+                        job.meta.get("mm_key"),
+                        defer_features=job.feature_ready_at > 0)
+                try:
+                    job.task.run_chunk()
+                except PoolExhausted:
+                    # allocator left the task untouched: stall + retry
+                    # once decode drain / preemption frees pages
+                    sched.note_stall(job, "pool")
+                    continue
+                self._m_sched_chunks.inc()
+                if job.task.finished:
+                    job.result = job.task.finish()
+                    sched.mark_ready(job)
+            out = []
+            if plan.decode and (self.n_active or self.preempted):
+                if plan.chunks:
+                    self._m_sched_mixed.inc()
+                out = self.decode_step()
+        return out
+
+    def drain_continuous(self, max_steps: int = 10_000,
+                         now_fn=None) -> List[Tuple[Request, int, bool]]:
+        """Step until every submitted request has prefetched, admitted,
+        and decoded to completion. ``now_fn`` supplies the modeled clock
+        for barrier checks (default: barriers already satisfied)."""
+        out: List[Tuple[Request, int, bool]] = []
+        steps = 0
+        while ((self.scheduler is not None and self.scheduler.has_work)
+               or self.n_active or self.preempted):
+            out.extend(self.step(now=now_fn() if now_fn else 0.0))
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError(
+                    f"continuous drain made no progress in {max_steps} "
+                    f"steps (stalls: "
+                    f"{self.scheduler.stall_counts if self.scheduler else {}})")
         return out
 
     # -- monolithic convenience (the vLLM-style baseline) ---------------------

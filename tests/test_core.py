@@ -283,3 +283,52 @@ def test_paper_table3_shape():
             assert ratio == 1.0, res
         else:
             assert 0.98 < ratio < 1.0, res
+
+
+def test_router_on_idle_drains_stale_busy_until():
+    """busy_until is only ever max'd by on_busy_until: without the idle
+    hook a finished instance keeps its stale backlog forever and pick()
+    is biased away from it. on_idle collapses the estimate so a drained
+    instance's load returns to ~0."""
+    dep = scale(parse("E-P-D"), 2)
+    r = Router(dep)
+    names = [i.name for i in dep.stage_instances("P")]
+    rid = "req-1"
+    r.on_enqueue(names[0], 100.0, rid=rid)
+    r.on_start(names[0], 100.0, rid=rid)
+    r.on_busy_until(names[0], 50.0)
+    # instance finished its work at t=60, but the estimate never drains:
+    assert r.status[names[0]].load(now=60.0) == 0.0  # backlog clamped...
+    assert r.status[names[0]].load(now=10.0) > 0.0   # ...but stale before t=50
+    r.on_idle(names[0], 10.0)
+    assert r.status[names[0]].busy_until == 10.0
+    assert r.status[names[0]].load(now=10.0) == pytest.approx(0.0)
+    # and pick() sees it as least-loaded again
+    r.on_busy_until(names[1], 5.0)
+    assert r.pick("P", now=10.0).spec.name == names[0]
+    # on_idle never moves the estimate FORWARD
+    r.on_idle(names[0], 99.0)
+    assert r.status[names[0]].busy_until == 10.0
+
+
+def test_router_ledger_caps_double_retirement():
+    """on_start(tokens=N) followed by chunk-granular on_prefill_progress
+    for the same N (the double-retirement bug) must not drag the
+    aggregate below other requests' outstanding work."""
+    dep = parse("E-P-D")
+    r = Router(dep)
+    name = dep.stage_instances("P")[0].name
+    r.on_enqueue(name, 64.0, rid="a")
+    r.on_enqueue(name, 32.0, rid="b")
+    # request a reports its 64 tokens TWICE: once at start, once chunked
+    r.on_start(name, 64.0, rid="a")
+    for _ in range(4):
+        r.on_prefill_progress(name, 16.0, rid="a")
+    st = r.status[name]
+    assert st.pending_tokens == 32.0          # b's work survives intact
+    assert "a" not in st.pending_by_req
+    r.on_start(name, 0.0, rid="b")
+    for _ in range(2):
+        r.on_prefill_progress(name, 16.0, rid="b")
+    assert st.pending_tokens == 0.0
+    assert st.pending_by_req == {}

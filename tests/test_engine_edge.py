@@ -175,3 +175,54 @@ def test_simulator_replicas_balance_load():
     t1 = one.throughput_tok_s / one.n_chips
     t2 = two.throughput_tok_s / two.n_chips
     assert t2 == pytest.approx(t1, rel=0.25)
+
+
+def test_idle_decode_step_dispatches_no_forward():
+    """Zero active slots: decode_step must return [] WITHOUT dispatching
+    the jitted forward or syncing `len` back to host (regression for the
+    idle-batch early-out)."""
+    cfg = get_config("smollm-135m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_batch=2, max_len=48, paged=True,
+                 page_size=8)
+    calls = {"n": 0}
+    real = eng._decode
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    eng._decode = counting
+    assert eng.decode_step() == []
+    assert calls["n"] == 0
+    # with an active slot the forward runs exactly once per step
+    r = Request(prompt_tokens=[3, 4, 5], max_new_tokens=4)
+    first, caches = eng.prefill_request(r)
+    eng.insert(r, caches, first)
+    eng.decode_step()
+    assert calls["n"] == 1
+
+
+def test_decode_fills_cache_to_exactly_max_len():
+    """Done-check boundary: a request may fill the KV cache to exactly
+    max_len (the old `>= max_len - 1` check gave away the last usable
+    position). Resident KV after the final step is prompt + decoded
+    inputs == max_len, and the token count follows."""
+    cfg = get_config("smollm-135m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    max_len, n_prompt = 16, 5
+    eng = Engine(cfg, params, max_batch=1, max_len=max_len, paged=True,
+                 page_size=8)
+    r = Request(prompt_tokens=list(range(2, 2 + n_prompt)),
+                max_new_tokens=100, eos_token=-1)    # length-capped only
+    first, caches = eng.prefill_request(r)
+    eng.insert(r, caches, first)
+    while eng.n_active:
+        eng.decode_step()
+    # each decode step writes one KV entry (starting at len=n_prompt)
+    # until the cache holds exactly max_len tokens
+    assert int(jnp.asarray(eng.caches["len"])[0]) == max_len
+    # outputs: the prefill token + one per decode step (max_len - n_prompt
+    # steps); the old check stopped one step early
+    assert len(r.output_tokens) == max_len - n_prompt + 1
+    eng.assert_no_page_leaks()

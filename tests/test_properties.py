@@ -172,3 +172,49 @@ def test_decode_monotone_in_batch(a, b, kv):
     cm = CostModel(CFG)
     lo, hi = sorted((a, b))
     assert cm.decode_step_time(lo, kv) <= cm.decode_step_time(hi, kv) + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Router pending-token ledger conservation
+# ---------------------------------------------------------------------------
+
+from repro.core.scheduler import Router  # noqa: E402
+
+from conftest import hyp_max_examples  # noqa: E402
+
+
+@settings(max_examples=hyp_max_examples(80), deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5),          # request id
+                          st.sampled_from(["enqueue", "start", "progress"]),
+                          st.integers(1, 64)),        # token amount
+                min_size=1, max_size=60))
+def test_router_pending_tokens_conserve_to_zero(ops):
+    """Under ARBITRARY interleavings of rid-tagged enqueue / start /
+    progress — including double-retirement attempts (start with full
+    tokens AND chunked progress), progress before start, and repeated
+    events — pending_tokens exactly equals the sum of what each request
+    enqueued minus what it legitimately retired, and retiring
+    everything drives it to 0 with an empty ledger."""
+    dep = parse("E-P-D")
+    r = Router(dep)
+    name = dep.stage_instances("P")[0].name
+    enqueued: dict = {}
+    for rid_n, op, tok in ops:
+        rid = f"r{rid_n}"
+        if op == "enqueue":
+            r.on_enqueue(name, float(tok), rid=rid)
+            enqueued[rid] = enqueued.get(rid, 0.0) + tok
+        elif op == "start":
+            r.on_start(name, float(tok), rid=rid)
+        else:
+            r.on_prefill_progress(name, float(tok), rid=rid)
+    st = r.status[name]
+    # the ledger IS the aggregate: no request can be over-retired
+    assert st.pending_tokens == pytest.approx(
+        sum(st.pending_by_req.values()))
+    assert st.pending_tokens <= sum(enqueued.values()) + 1e-9
+    # retiring every request's remainder conserves exactly to zero
+    for rid in list(st.pending_by_req):
+        r.on_prefill_progress(name, st.pending_by_req[rid], rid=rid)
+    assert st.pending_tokens == pytest.approx(0.0)
+    assert st.pending_by_req == {}
