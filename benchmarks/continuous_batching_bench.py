@@ -113,6 +113,52 @@ def bench_continuous_batching() -> List[str]:
         if n == 8:
             snap["telemetry"] = cont.metrics.snapshot()
 
+    # ---- adaptive chunk sizing A/B: fixed vs adaptive budget ----
+    # a decode-starved shape (2 slots, short prompts, long decodes):
+    # prefills finish fast and back up behind busy decode slots, so the
+    # adaptive budget shrinks, then grows back once the backlog clears —
+    # greedy outputs must not move by a single token
+    def build_small() -> EPDCluster:
+        return EPDCluster(cfg, params, max_batch=2, max_len=max_len,
+                          paged=True, page_size=page, chunked_prefill=True,
+                          prefill_chunk=chunk, prefix_cache=True)
+
+    def ab_requests() -> List[Request]:
+        return [Request(
+            prompt_tokens=[(11 * i + j) % 400 + 2 for j in range(48)],
+            max_new_tokens=24, eos_token=-1) for i in range(8)]
+
+    ab_reqs = ab_requests()
+    fixed = build_small()
+    fixed.run_continuous(ab_requests(), chunk_budget_tokens=3 * chunk)
+    t_fixed = fixed.continuous_timeline.makespan
+
+    adapt = build_small()
+    adapt.run_continuous(ab_reqs, chunk_budget_tokens=3 * chunk,
+                         adaptive_chunking=True)
+    t_adapt = adapt.continuous_timeline.makespan
+    sched = adapt.continuous_scheduler
+    assert sched.budget_shrinks > 0, \
+        "decode-starved workload must shrink the adaptive budget"
+    for a, b in zip(by_id(fixed.report.completed),
+                    by_id(adapt.report.completed)):
+        assert list(a.output_tokens) == list(b.output_tokens), \
+            "adaptive chunk sizing changed greedy output"
+    for eng in [adapt.prefill_engine] + adapt.decode_engines:
+        eng.assert_no_page_leaks()
+    snap["adaptive_ab"] = {
+        "n_requests": len(ab_reqs), "chunk_budget_tokens": 3 * chunk,
+        "fixed_makespan_ms": round(t_fixed * 1e3, 3),
+        "adaptive_makespan_ms": round(t_adapt * 1e3, 3),
+        "budget_shrinks": sched.budget_shrinks,
+        "budget_grows": sched.budget_grows,
+        "bit_identical": True,
+    }
+    rows.append(f"adaptive_ab,bit_identical,"
+                f"{sched.budget_shrinks}_shrinks_{sched.budget_grows}_grows_"
+                f"fixed_{t_fixed * 1e3:.1f}ms_vs_"
+                f"adaptive_{t_adapt * 1e3:.1f}ms")
+
     out = os.path.join(os.path.dirname(__file__), "..",
                        "BENCH_continuous_batching.json")
     with open(os.path.abspath(out), "w") as f:

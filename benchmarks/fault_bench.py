@@ -1,15 +1,23 @@
 """Fault-injection chaos benchmark: recovery vs recovery-off.
 
-Two halves, both seeded and deterministic:
+Three halves, all seeded and deterministic:
 
-1. REAL cluster: a 2-decode-instance FT cluster under a seeded fault
-   plan (transfer wire loss + one armed mid-run decode-instance crash)
-   must complete 100% of requests with greedy outputs BIT-IDENTICAL to
-   the zero-fault run (crash victims re-route to the surviving
-   instance; the re-prefill rides the prefix cache). The same plan
-   with recovery disabled loses requests — surfaced, never silent.
+1. REAL cluster (serial driver): a 2-decode-instance FT cluster under a
+   seeded fault plan (transfer wire loss + one armed mid-run
+   decode-instance crash) must complete 100% of requests with greedy
+   outputs BIT-IDENTICAL to the zero-fault run (crash victims re-route
+   to the surviving instance; the re-prefill rides the prefix cache).
+   The same plan with recovery disabled loses requests — surfaced,
+   never silent.
 
-2. Simulator sweep: 1% / 5% per-group transfer loss on the EPD
+2. CONTINUOUS mode: the same chaos (5% wire loss + one armed crash)
+   through ``run_continuous`` — the iteration-level scheduler absorbs
+   transfer faults as retry-parked jobs and the crash as re-prefill
+   work items on the survivor. 100% completion, bit-identical to the
+   ZERO-FAULT CONTINUOUS run, and the modeled throughput retention
+   (zero-fault makespan / chaos makespan) is recorded.
+
+3. Simulator sweep: 1% / 5% per-group transfer loss on the EPD
    simulator. With recovery, every request completes and the p99 TTFT
    inflation stays bounded (retry time is charged through the
    CostModel into latency accounting); recovery-off loses requests.
@@ -117,6 +125,55 @@ def bench_faults() -> List[str]:
         f"cluster_crash_reroute,bit_identical,"
         f"{ft.report.instance_crashes}_crash_{ft.report.reroutes}_"
         f"reroutes_0_lost_vs_{len(off.report.lost)}_lost_off")
+
+    # ---- CONTINUOUS mode: chaos through the iteration scheduler ----
+    def run_cont(faults=None, recovery=True):
+        cl = EPDCluster(cfg, params, max_batch=2, max_len=64, paged=True,
+                        page_size=8, prefix_cache=True, n_decode=2,
+                        chunked_prefill=True, prefill_chunk=8,
+                        faults=faults, recovery=recovery)
+        rs = reqs()
+        done = cl.run_continuous(rs)
+        return cl, rs, done
+
+    c_base, c_ref, _ = run_cont()           # zero-fault continuous
+    t_base = c_base.continuous_timeline.makespan
+    cont_plan = FaultPlan(seed=7, rates={SITE_TRANSFER_WIRE: 0.05},
+                          armed=[ArmedFault(SITE_DECODE_CRASH,
+                                            key=(0, 8))])
+    c_ft, c_got, c_done = run_cont(faults=cont_plan)
+    assert len(c_done) == len(c_ref) and not c_ft.report.lost, \
+        "continuous FT must complete 100%"
+    assert c_ft.report.instance_crashes == 1
+    for a, b in zip(c_ref, c_got):
+        assert a.output_tokens == b.output_tokens, \
+            "continuous recovery must keep greedy outputs bit-identical"
+    c_ft.prefill_engine.assert_no_page_leaks()
+    for i in c_ft.live_decode_indices():
+        c_ft.decode_engines[i].assert_no_page_leaks()
+    c_ft.acc.assert_all_closed()
+    t_chaos = c_ft.continuous_timeline.makespan
+    retention = t_base / t_chaos
+    c_off, _, c_off_done = run_cont(faults=cont_plan, recovery=False)
+    assert len(c_off_done) + len(c_off.report.lost) == len(c_ref)
+
+    snap["continuous"] = {
+        "n_requests": len(c_ref),
+        "zero_fault_makespan_ms": round(t_base * 1e3, 3),
+        "chaos_makespan_ms": round(t_chaos * 1e3, 3),
+        "throughput_retention": round(retention, 3),
+        "crashes": c_ft.report.instance_crashes,
+        "reroutes": c_ft.report.reroutes,
+        "retry_parks": c_ft.metrics.total("sched_retry_parks_total"),
+        "bit_identical": True, "ft_lost": 0,
+        "recovery_off_lost": len(c_off.report.lost),
+    }
+    rows.append(
+        f"continuous_chaos,bit_identical_100pct,"
+        f"retention_x{retention:.2f}_"
+        f"{c_ft.report.instance_crashes}_crash_"
+        f"{c_ft.report.reroutes}_reroutes_vs_"
+        f"{len(c_off.report.lost)}_lost_off")
 
     # ---- simulator: transfer-loss sweep with charged retry time ----
     model = get_config("openpangu-7b-vl")

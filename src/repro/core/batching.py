@@ -49,7 +49,12 @@ class PrefillJob:
                             sync-arm E->P push, or request arrival);
     ``feature_ready_at``  — the async-arm feature arrival: chunks whose
                             window stays before the image run ignore it,
-                            the chunk overlapping the run waits for it.
+                            the chunk overlapping the run waits for it;
+    ``retry_at``          — a READY job parked after a failed decode
+                            admission (e.g. a transfer fault): the
+                            capped retry backoff as a dependency edge —
+                            admission skips the job until the clock
+                            reaches it, other ready jobs may overtake.
     """
 
     req: Request
@@ -57,6 +62,7 @@ class PrefillJob:
     chunk: int = 0                     # the engine's chunk window (tokens)
     ready_at: float = 0.0
     feature_ready_at: float = 0.0
+    retry_at: float = 0.0
     task: Any = None
     result: Optional[Tuple[int, Any]] = None
     meta: Dict[str, Any] = field(default_factory=dict)
@@ -143,11 +149,27 @@ class IterationScheduler:
     """
 
     def __init__(self, *, max_live_prefills: int = 4,
-                 chunk_budget_tokens: Optional[int] = None):
+                 chunk_budget_tokens: Optional[int] = None,
+                 adaptive_chunking: bool = False,
+                 min_chunk_budget: int = 16,
+                 max_chunk_budget: int = 1 << 20):
         if max_live_prefills < 1:
             raise ValueError("need max_live_prefills >= 1")
         self.max_live_prefills = max_live_prefills
         self.chunk_budget_tokens = chunk_budget_tokens
+        # adaptive chunk sizing (behind a flag): the per-iteration
+        # prefill-token budget shrinks when decode slots starve (ready
+        # prefills queue against zero free slots — decode drain is the
+        # bottleneck, so composing more prefill only grows the held-page
+        # working set) and grows back while the decode pool has headroom
+        # and no admission backlog exists. Scheduling-only: greedy
+        # outputs are bit-identical at any budget.
+        self.adaptive_chunking = adaptive_chunking
+        self.min_chunk_budget = min_chunk_budget
+        self.max_chunk_budget = max_chunk_budget
+        self._budget: Optional[int] = chunk_budget_tokens
+        self.budget_shrinks = 0
+        self.budget_grows = 0
         self.waiting: Deque[PrefillJob] = deque()
         self.live: List[PrefillJob] = []
         self.ready: Deque[PrefillJob] = deque()
@@ -173,6 +195,18 @@ class IterationScheduler:
         self.ready.appendleft(job)
         self.note_stall(job, "admission")
 
+    def park_ready(self, job: PrefillJob, retry_at: float,
+                   reason: str = "retry_wait") -> None:
+        """Executor: admission FAILED in a retryable way (a transfer
+        fault drew on the P->D hand-off). The job returns to the queue
+        head with a ``retry_at`` barrier: the plan composes around it —
+        younger ready jobs may admit first — and ``next_barrier_time``
+        exposes the clock so an otherwise-idle loop jumps straight to
+        the retry instead of spinning."""
+        job.retry_at = retry_at
+        self.ready.appendleft(job)
+        self.note_stall(job, reason)
+
     def note_stall(self, job: PrefillJob, reason: str) -> None:
         self.stall_counts[reason] = self.stall_counts.get(reason, 0) + 1
 
@@ -185,18 +219,58 @@ class IterationScheduler:
     def has_work(self) -> bool:
         return bool(self.waiting or self.live or self.ready)
 
-    def next_barrier_time(self) -> Optional[float]:
+    def next_barrier_time(self, after: Optional[float] = None,
+                          ) -> Optional[float]:
         """Earliest barrier among jobs that could actually run — the
         idle-jump target when a plan came back empty because every job
         is stalled on a future arrival. Waiting jobs count only while
         the live window has headroom: with the window full their
         barriers are unreachable until a live job finishes, so jumping
-        to one would stall the clock in the past."""
+        to one would stall the clock in the past. Parked READY jobs
+        (admission retry backoff) count too: their ``retry_at`` is the
+        earliest the re-admission may run.
+
+        ``after`` drops barriers at or before that clock: a pool-stalled
+        live job's ELAPSED barrier must not mask a parked job's future
+        ``retry_at`` — jumping to the retry releases the parked payload
+        and un-deadlocks the pool, where restarting in place never
+        advances the clock."""
         jobs = list(self.live)
         if len(self.live) < self.max_live_prefills:
             jobs += list(self.waiting)
         ts = [j.barrier_time() for j in jobs]
+        ts += [j.retry_at for j in self.ready if j.retry_at > 0.0]
+        if after is not None:
+            ts = [t for t in ts if t > after]
         return min(ts) if ts else None
+
+    def _effective_budget(self, free_slots: int) -> Optional[int]:
+        """The prefill-token budget this iteration. Static unless
+        ``adaptive_chunking``: then decode starvation (finished prefills
+        queued against zero free slots) halves it down to
+        ``min_chunk_budget`` and admission headroom (free slots, no
+        ready backlog) doubles it back up to ``max_chunk_budget``."""
+        if not self.adaptive_chunking:
+            return self.chunk_budget_tokens
+        if free_slots == 0 and self.ready:
+            cur = self._budget
+            if cur is None:
+                # unlimited so far: seed from the widest live chunk so
+                # the first shrink is meaningful
+                cur = max((j.task.next_chunk_tokens if j.task is not None
+                           else min(j.chunk or j.n_tokens, j.n_tokens))
+                          for j in self.live) * len(self.live)
+            nxt = max(self.min_chunk_budget, cur // 2)
+            if nxt != cur:
+                self.budget_shrinks += 1
+            self._budget = nxt
+        elif free_slots > 0 and not self.ready \
+                and self._budget is not None:
+            nxt = min(self.max_chunk_budget, self._budget * 2)
+            if nxt != self._budget:
+                self.budget_grows += 1
+            self._budget = nxt
+        return self._budget
 
     # ---- the per-iteration composer ----
     def plan(self, *, now: float = 0.0, free_slots: int = 0,
@@ -209,13 +283,27 @@ class IterationScheduler:
         this step."""
         self.steps += 1
         plan = BatchPlan(step=self.steps)
-        n = min(max(0, free_slots), len(self.ready))
-        for _ in range(n):
-            plan.admit.append(self.ready.popleft())
+        n = max(0, free_slots)
+        if n and self.ready:
+            # admission skips jobs parked on a future retry_at (the
+            # transfer-fault backoff edge): the plan composes around
+            # them — later ready jobs may overtake — and they rejoin
+            # FIFO order once the clock reaches the barrier.
+            keep: List[PrefillJob] = []
+            while self.ready and len(plan.admit) < n:
+                job = self.ready.popleft()
+                if job.retry_at > now:
+                    keep.append(job)
+                    plan.stalled.append((job, "retry_wait"))
+                    self.note_stall(job, "retry_wait")
+                    continue
+                plan.admit.append(job)
+            for job in reversed(keep):
+                self.ready.appendleft(job)
         while self.waiting and len(self.live) < self.max_live_prefills:
             self.live.append(self.waiting.popleft())
         if self.live:
-            budget = self.chunk_budget_tokens
+            budget = self._effective_budget(free_slots)
             order = [self.live[(self._rr + i) % len(self.live)]
                      for i in range(len(self.live))]
             self._rr = (self._rr + 1) % max(len(self.live), 1)

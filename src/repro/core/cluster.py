@@ -450,8 +450,7 @@ class EPDCluster:
                                                    mm_key=key)
 
     # ---- P->D transfer + Decode import ----
-    def transfer_and_insert(self, req: Request, caches, first: int,
-                            append_token: bool = True) -> Engine:
+    def _build_kv_plan(self, req: Request, caches) -> TransferPlan:
         # paged payloads already carry their page-granular byte count;
         # dense payloads are measured from the actual arrays.
         nbytes = getattr(caches, "kv_nbytes", None)
@@ -483,6 +482,19 @@ class EPDCluster:
                         handshake=self.cost.hw.handshake,
                         link_bw=self.cost.hw.link_bw,
                         page_bytes=self.cost.kv_page_bytes_per_layer())
+        return p
+
+    def _count_transfer_recovery(self, rec) -> None:
+        self.metrics.counter("recovery_retries_total",
+                             site="transfer").inc(rec.retries)
+        self.metrics.counter("transfer_replans_total").inc(
+            rec.replanned_groups)
+        self.metrics.counter("retry_time_seconds_total",
+                             site="transfer").inc(rec.retry_time)
+
+    def transfer_and_insert(self, req: Request, caches, first: int,
+                            append_token: bool = True) -> Engine:
+        p = self._build_kv_plan(req, caches)
         # deliver the plan through the fault plane: transfer groups
         # re-handshake/resend with backoff, exhausted groups replan
         # fresh; the retry time lands in retry_time_total (latency
@@ -493,12 +505,12 @@ class EPDCluster:
                 p, self.injector,
                 self.retry if self.recovery else NO_RETRY,
                 key=req.request_id, replan=self.recovery)
-            self.metrics.counter("recovery_retries_total",
-                                 site="transfer").inc(rec.retries)
-            self.metrics.counter("transfer_replans_total").inc(
-                rec.replanned_groups)
-            self.metrics.counter("retry_time_seconds_total",
-                                 site="transfer").inc(rec.retry_time)
+            self._count_transfer_recovery(rec)
+        return self._insert_with_plan(req, caches, first, p, rec,
+                                      append_token)
+
+    def _insert_with_plan(self, req: Request, caches, first: int,
+                          p: TransferPlan, rec, append_token: bool) -> Engine:
         engine = self._pick_decode() or self.decode_engine
         # The exposed transfer latency (and any retry backoff folded
         # into it by recovery) is modeled time — the real arrays move
@@ -588,9 +600,10 @@ class EPDCluster:
         if i in self.dead:
             raise InstanceDown(f"decode[{i}]", 0)
         eng = self.decode_engines[i]
-        inflight = [r for r in eng.slots if r is not None]
-        inflight += [pr.req for pr in eng.preempted]
+        inflight = eng.mark_crashed()
         self.dead.add(i)
+        if self.router is not None:
+            self.router.on_instance_down(eng.name)
         self.report.instance_crashes += 1
         self.metrics.counter("instance_crashes_total",
                              engine=eng.name).inc()
@@ -709,9 +722,13 @@ class EPDCluster:
 
     def _finalize(self, done: List[Request]) -> None:
         """Close the run out: sync accounting, drain swap notes, fold
-        engine counters into the report (shared by both drivers)."""
+        engine counters into the report (shared by both drivers). Any
+        engine-side casualty still sitting in ``eng.lost`` (filled
+        outside a driver's own drain point) lands in ``report.lost``
+        with its accountant record closed — losses are never silent."""
         self.acc.sync()
         for eng in self.decode_engines:
+            self._harvest_engine_lost(eng, None)
             eng.drain_notes()
         self.prefill_engine.drain_notes()
         self.report.completed.extend(done)
@@ -738,6 +755,13 @@ class EPDCluster:
         whole job (``ready_at``); inline charges the encode forward on
         the prefill stream and has no link to wait on."""
         pe = self.prefill_engine
+        # jobs the engine cannot serve through the resumable chunk state
+        # machine — whisper-class encoder-decoder prefills (cross-attn
+        # needs the full enc frames), or a non-chunked/non-paged prefill
+        # engine — run MONOLITHIC: one unchunkable work item through
+        # ``prefill_request``, still scheduled/admitted like any job.
+        monolithic = (self.cfg.encoder is not None or not pe.paged
+                      or pe._prefill_suffix is None)
         ready_at = 0.0
         feature_ready_at = 0.0
         meta: Dict[str, Any] = {}
@@ -752,8 +776,12 @@ class EPDCluster:
                 with self.tracer.span("encode", track=eng.name,
                                       request_id=req.request_id):
                     _, ran = eng.dispatch(req)
-                feats = self.store.get(key, record=False)
-                meta["mm_feats"] = jnp.asarray(feats)[None]
+                # the feature itself is fetched LAZILY at the barrier
+                # chunk (``_fetch_features_continuous``) so a store
+                # fault or mid-flight eviction surfaces inside the
+                # iteration loop, where the §3.2 retry/recompute arms
+                # are schedulable work — not at submit time.
+                meta["needs_feats"] = True
                 t_enc = self.cost.encode_time(req.mm_tokens) if ran else 0.0
                 if self.ep_overlap == "inline":
                     if t_enc:
@@ -765,9 +793,11 @@ class EPDCluster:
                     nbytes = self.cost.feature_bytes(req.mm_tokens)
                     arrival = (enc_done + self.cost.dispatch_latency(nbytes)
                                + self.cost.feature_transfer_time(nbytes))
-                    if self.ep_overlap == "async":
+                    if self.ep_overlap == "async" and not monolithic:
                         feature_ready_at = arrival
                     else:
+                        # sync arm — or a monolithic prefill, whose one
+                        # work item always overlaps the feature
                         ready_at = arrival
                     # announce->ready bookkeeping (Table-3 overlap ratio)
                     self.prefetcher.notify(req.request_id, key,
@@ -775,11 +805,19 @@ class EPDCluster:
                                            on_ready=lambda _rc: None)
                     self._ep_loop.run()
         meta["mm_key"] = key
-        n_mm = req.mm_tokens if key is not None else 0
+        # whisper-class enc frames live on the ENCODER side: they do not
+        # occupy decoder prefill positions
+        n_mm = (req.mm_tokens
+                if key is not None and self.cfg.encoder is None else 0)
+        n_tokens = len(req.prompt_tokens) + n_mm
         job = PrefillJob(
-            req=req, n_tokens=len(req.prompt_tokens) + n_mm,
-            chunk=pe.prefill_chunk if pe.chunked_prefill else pe.max_len,
+            req=req, n_tokens=n_tokens,
+            chunk=(n_tokens if monolithic
+                   else pe.prefill_chunk if pe.chunked_prefill
+                   else pe.max_len),
             ready_at=ready_at, feature_ready_at=feature_ready_at)
+        if monolithic:
+            meta["monolithic"] = True
         job.meta.update(meta)
         self._park_queued(req)
         router.on_enqueue(pe.name, job.n_tokens, rid=str(req.request_id))
@@ -805,6 +843,115 @@ class EPDCluster:
                 return True
         return False
 
+    def _fetch_features_continuous(self, job: PrefillJob,
+                                   sched: IterationScheduler,
+                                   tl: StreamTimeline) -> bool:
+        """Lazy E->P feature fetch at the barrier chunk, with the store
+        failure domain as SCHEDULER work instead of a synchronous retry
+        loop: a faulted fetch (or a mid-flight eviction) pushes the
+        job's barrier clock by the capped retry backoff — the plan
+        composes around the parked job — and on policy exhaustion the
+        §3.2 recompute runs as a schedulable encode work item whose
+        modeled completion gates only this job's barrier chunk. Returns
+        True once ``meta["mm_feats"]`` is populated; False means the
+        job stalled this iteration (barrier pushed into the future)."""
+        req = job.req
+        key = job.meta["mm_key"]
+        rid = req.request_id
+        barrier = "ready_at" if job.meta.get("monolithic") \
+            else "feature_ready_at"
+        attempt = job.meta.get("store_attempts", 0)
+        feats = self.store.get(key, record=False, attempt=attempt)
+        if feats is not None:
+            job.meta["mm_feats"] = jnp.asarray(feats)[None]
+            return True
+        attempt += 1
+        job.meta["store_attempts"] = attempt
+        base = max(tl.t_prefill, job.ready_at, job.feature_ready_at)
+        nxt = self.retry.next_retry_at(base, attempt, key=key)
+        if nxt is not None:
+            back = nxt - base
+            self.metrics.counter("retry_time_seconds_total",
+                                 site=SITE_STORE_FETCH).inc(back)
+            self.metrics.counter("recovery_retries_total",
+                                 site=SITE_STORE_FETCH).inc()
+            self.acc.sync()
+            t0 = self.acc.now
+            self.acc.advance(back, rid, "retry")
+            if self.tracer.enabled:
+                self.tracer.add("retry.store", t0, self.acc.now,
+                                track="store", request_id=rid,
+                                attempt=attempt)
+            setattr(job, barrier, nxt)
+            sched.note_stall(job, "store_retry")
+            return False
+        # policy exhausted (or single-attempt NO_RETRY): §3.2 local
+        # recompute through the SAME jitted frontend forward — the
+        # rebuilt features are bit-identical — charged on the ENCODE
+        # stream as its own work item; its completion is this job's new
+        # feature barrier and every other job keeps stepping meanwhile.
+        feats = self.encode_engines[0].compute_features(
+            req.mm_payload, req.mm_tokens)
+        self.store.put(key, feats, feats.nbytes)
+        self.report.recomputes += 1
+        self.metrics.counter("continuous_recomputes_total").inc()
+        t_enc = self.cost.encode_time(req.mm_tokens)
+        done = tl.charge_encode(t_enc, not_before=tl.t_prefill)
+        setattr(job, barrier, max(getattr(job, barrier), done))
+        job.meta["mm_feats"] = jnp.asarray(feats)[None]
+        sched.note_stall(job, "store_recompute")
+        # stall until the modeled clock reaches the recompute completion
+        return False
+
+    def _advance_monolithic(self, job: PrefillJob,
+                            sched: IterationScheduler, tl: StreamTimeline,
+                            router: Router) -> bool:
+        """Run an UNCHUNKABLE job as one scheduled work item: the whole
+        prefill through ``prefill_request`` (whisper-class cross-attn
+        decoders, or engines without the paged suffix step). The job
+        admits/parks/retries exactly like a chunked one — only the
+        prefill itself is indivisible."""
+        pe = self.prefill_engine
+        req = job.req
+        rid = str(req.request_id)
+        if job.meta.get("needs_feats") and job.meta.get("mm_feats") is None:
+            if not self._fetch_features_continuous(job, sched, tl):
+                return False
+        feats = job.meta.get("mm_feats")
+        self._unpark_queued(req)
+        try:
+            with self.tracer.span("prefill.monolithic", track=pe.name,
+                                  request_id=req.request_id,
+                                  tokens=job.n_tokens):
+                if self.cfg.encoder is not None and feats is not None:
+                    first, payload = pe.prefill_request(req, None, feats)
+                elif feats is not None:
+                    first, payload = pe.prefill_request(
+                        req, mm_feats=feats, mm_key=job.meta.get("mm_key"))
+                elif job.meta.get("mm_key") is not None:
+                    first, payload = pe.prefill_request(
+                        req, mm_key=job.meta["mm_key"])
+                else:
+                    first, payload = pe.prefill_request(req)
+        except PoolExhausted:
+            # the allocator raises before any mutation: retry after
+            # decode drain / admission frees prefill pool pages
+            sched.note_stall(job, "pool")
+            self._park_queued(req)
+            return False
+        router.on_start(pe.name, 0, rid=rid)
+        cached = getattr(payload, "cached_tokens", 0)
+        dur = self.cost.prefill_time(max(job.n_tokens, 1),
+                                     cached_prefix=cached)
+        nb = max(job.ready_at, job.feature_ready_at)
+        t_done = tl.charge_prefill(dur, not_before=nb)
+        router.on_prefill_progress(pe.name, job.n_tokens, rid=rid)
+        router.on_busy_until(pe.name, t_done)
+        job.result = (first, payload)
+        job.meta["prefill_done"] = t_done
+        sched.mark_ready(job)
+        return True
+
     def _advance_chunk(self, job: PrefillJob, sched: IterationScheduler,
                        tl: StreamTimeline, router: Router) -> bool:
         """Run one chunk of one scheduled job: lazy task creation (the
@@ -812,13 +959,14 @@ class EPDCluster:
         once the barrier chunk is reached, then the jitted suffix
         prefill — with chunk-granular occupancy reported to the Router
         as the chunk ACTUALLY executes (ground truth, not callbacks)."""
+        if job.meta.get("monolithic"):
+            return self._advance_monolithic(job, sched, tl, router)
         pname = self.prefill_engine.name
         rid = str(job.req.request_id)
         if job.task is None:
-            feats = job.meta.get("mm_feats")
             job.task = self.prefill_engine.start_prefill_task(
                 job.req, None, job.meta.get("mm_key"),
-                defer_features=feats is not None)
+                defer_features=bool(job.meta.get("needs_feats")))
             self._unpark_queued(job.req)
             # cached-prefix tokens retire at task creation; computed
             # tokens retire per executed chunk below — conservation:
@@ -829,6 +977,10 @@ class EPDCluster:
                 cached_prefix=job.task.done))
         task = job.task
         needed_feats = task.needs_features_next()
+        if needed_feats and job.meta.get("needs_feats") \
+                and job.meta.get("mm_feats") is None:
+            if not self._fetch_features_continuous(job, sched, tl):
+                return False
         if needed_feats and job.meta.get("mm_feats") is not None:
             task.supply_features(job.meta["mm_feats"])
         try:
@@ -855,8 +1007,110 @@ class EPDCluster:
             sched.mark_ready(job)
         return True
 
+    def _admit_with_faults(self, job: PrefillJob, req: Request, payload,
+                           first: int, append_token: bool,
+                           sched: IterationScheduler,
+                           tl: StreamTimeline) -> Optional[Engine]:
+        """Admit one ready job through the fault plane WITHOUT blocking
+        the iteration on a synchronous retry loop. Each admission pass
+        makes ONE delivery attempt of the whole plan; a transfer fault
+        parks the job at the ready-queue head with a ``retry_at`` clock
+        (capped backoff, charged to the request's retry component as a
+        dependency edge — the decode device is not busy waiting) and the
+        plan composes around it. On policy exhaustion the serial arm
+        fires: full grouped retry + fresh replan of missing groups; if
+        THAT fails, TransferError propagates and the caller records the
+        loss. Returns None when parked."""
+        p = self._build_kv_plan(req, payload)
+        rid = req.request_id
+        attempt = job.meta.get("xfer_attempts", 0) + 1
+        if not self.recovery or attempt >= self.retry.max_attempts:
+            # the last word: the grouped retry/replan arm (recovery off:
+            # single attempt, no replan — the loss baseline)
+            p, rec = self.cost.recover_transfer(
+                p, self.injector,
+                self.retry if self.recovery else NO_RETRY,
+                key=(rid, "replan"), replan=self.recovery)
+            self._count_transfer_recovery(rec)
+            return self._insert_with_plan(req, payload, first, p, rec,
+                                          append_token)
+        one_shot = RetryPolicy(max_attempts=1, jitter=0.0,
+                               seed=self.retry.seed)
+        try:
+            p, rec = self.cost.recover_transfer(
+                p, self.injector, one_shot, key=(rid, attempt),
+                replan=False)
+        except TransferError:
+            job.meta["xfer_attempts"] = attempt
+            base = max(tl.t_prefill, job.meta.get("prefill_done", 0.0))
+            nxt = self.retry.next_retry_at(base, attempt, key=rid)
+            back = nxt - base
+            self.metrics.counter("recovery_retries_total",
+                                 site="transfer").inc()
+            self.metrics.counter("retry_time_seconds_total",
+                                 site="transfer").inc(back)
+            self.metrics.counter("sched_retry_parks_total",
+                                 engine=self.prefill_engine.name).inc()
+            self.acc.sync()
+            t0 = self.acc.now
+            self.acc.advance(back, rid, "retry")
+            if self.tracer.enabled:
+                self.tracer.add("retry.transfer", t0, self.acc.now,
+                                track="router", request_id=rid,
+                                attempt=attempt)
+            sched.park_ready(job, nxt)
+            return None
+        self._count_transfer_recovery(rec)
+        return self._insert_with_plan(req, payload, first, p, rec,
+                                      append_token)
+
+    def _harvest_reroutes(self, sched: IterationScheduler,
+                          tl: StreamTimeline, router: Router) -> None:
+        """Scheduler-visible crash/swap-loss recovery: every harvested
+        request re-enters the iteration loop as a fresh ``PrefillJob``
+        over ``prompt + output_tokens[:-1]`` (the prefix cache keeps the
+        re-prefill cheap); at admission the ORIGINAL request resumes
+        decode on a survivor with ``append_token=False`` — bit-identical
+        greedy resume, no global drain, other requests keep stepping."""
+        while self._reroute_queue:
+            req = self._reroute_queue.pop(0)
+            seq = list(req.prompt_tokens) + list(req.output_tokens[:-1])
+            shadow = Request(prompt_tokens=seq, max_new_tokens=1,
+                             mm_payload=req.mm_payload,
+                             mm_tokens=req.mm_tokens, mm_pos=req.mm_pos,
+                             priority=req.priority)
+            # the shadow prefill's charges (store retries, transfer
+            # exposure) bill the original request's ledger entry
+            self.acc.alias(shadow.request_id, req.request_id)
+            self.metrics.counter("continuous_reroute_jobs_total").inc()
+            job = self._submit_continuous(shadow, sched, tl, router)
+            job.meta["resume"] = (req, int(req.output_tokens[-1]))
+
+    def _harvest_engine_lost(self, eng: Engine,
+                             sched: Optional[IterationScheduler]) -> None:
+        """Reconcile one engine's swap-loss casualties with the
+        scheduler's live window: requests the ENGINE could not rebuild
+        (multimodal feature embeddings are not retained; cross-attn
+        decoders have no suffix step) re-enter the waiting queue as
+        re-prefill jobs instead of vanishing — the cluster holds what
+        the engine lost (payload bytes, encode recompute). Without
+        recovery (or on the serial driver) they surface in
+        ``report.lost`` exactly as before."""
+        while eng.lost:
+            lost = eng.lost.pop(0)
+            if sched is not None and self.recovery and lost.output_tokens:
+                lost.killed = False
+                self.metrics.counter("continuous_harvests_total",
+                                     source="swap_lost").inc()
+                self._park_queued(lost)
+                self._reroute_queue.append(lost)
+            else:
+                self.report.lost.append(lost)
+                self.acc.close(lost.request_id)
+
     def _decode_iteration(self, done: List[Request], tl: StreamTimeline,
-                          router: Router) -> bool:
+                          router: Router,
+                          sched: Optional[IterationScheduler] = None) -> bool:
         """One lock-step decode iteration across every live instance —
         instances are separate devices, so the modeled stream advances
         by the SLOWEST instance's step, not the sum."""
@@ -883,18 +1137,17 @@ class EPDCluster:
             for r in eng.slots:
                 if r is not None:
                     self.acc.set_state(r.request_id, "compute")
-            while eng.lost:
-                lost = eng.lost.pop(0)
-                self.report.lost.append(lost)
-                self.acc.close(lost.request_id)
+            self._harvest_engine_lost(eng, sched)
         if durs:
             tl.charge_decode(max(durs))
         return stepped
 
     def run_continuous(self, reqs: List[Request], *,
                        max_steps: int = 100_000,
-                       max_live_prefills: Optional[int] = None
-                       ) -> List[Request]:
+                       max_live_prefills: Optional[int] = None,
+                       chunk_budget_tokens: Optional[int] = None,
+                       adaptive_chunking: bool = False,
+                       on_step=None) -> List[Request]:
         """Serve ``reqs`` with iteration-level (continuous) batching:
         every device step executes one scheduler-produced
         :class:`BatchPlan` — ready prefill chunks from DIFFERENT
@@ -906,17 +1159,17 @@ class EPDCluster:
         ground-truth :class:`Router` sees chunk-granular occupancy.
         Greedy outputs are bit-identical to the serial ``submit`` +
         ``run_until_done`` path: both drivers execute the same
-        ``PrefillTask`` chunk sequence and the same jitted forwards."""
-        if self.faults is not None:
-            raise ValueError(
-                "run_continuous does not compose with fault injection "
-                "yet — run faults through submit()/run_until_done() "
-                "(see ROADMAP follow-ups)")
-        if self.cfg.encoder is not None and any(r.is_multimodal
-                                                for r in reqs):
-            raise ValueError(
-                "continuous batching serves scatter-path VLMs only: "
-                "encoder-decoder (whisper-class) prefill cannot chunk")
+        ``PrefillTask`` chunk sequence and the same jitted forwards.
+
+        The loop composes with the fault plane end-to-end: decode
+        crashes harvest in-flight work back into the scheduler as
+        re-prefill jobs, transfer faults park the failed admission
+        behind a ``retry_at`` barrier, store faults take the §3.2
+        retry/recompute arms as schedulable work, and swap losses the
+        engine cannot rebuild re-enter ``waiting``. Completed greedy
+        outputs stay bit-identical to the zero-fault run; ``lost`` is
+        the only other exit. ``on_step(step)`` (when given) runs after
+        every iteration — tests hook per-iteration leak audits there."""
         pe = self.prefill_engine
         tl = StreamTimeline()
         self.continuous_timeline = tl
@@ -928,13 +1181,21 @@ class EPDCluster:
             router.register_prefix_cache(pe.name, pe.prefix_cache)
         self.router = router
         if max_live_prefills is None:
-            # size the live window to what the prefill pool can actually
-            # hold in-flight at once (worst case: every live task grows
-            # to max_len) — interleaving more would only stall on alloc
-            per_req = max(1, pe.max_len // pe.page_size)
-            max_live_prefills = min(
-                4, max(1, (pe.pool.n_pages - 1) // per_req))
-        sched = IterationScheduler(max_live_prefills=max_live_prefills)
+            if pe.paged:
+                # size the live window to what the prefill pool can
+                # actually hold in-flight at once (worst case: every
+                # live task grows to max_len) — interleaving more would
+                # only stall on alloc
+                per_req = max(1, pe.max_len // pe.page_size)
+                max_live_prefills = min(
+                    4, max(1, (pe.pool.n_pages - 1) // per_req))
+            else:
+                # dense engines hold no pool pages mid-prefill
+                # (monolithic jobs): the window only bounds fairness
+                max_live_prefills = 4
+        sched = IterationScheduler(max_live_prefills=max_live_prefills,
+                                   chunk_budget_tokens=chunk_budget_tokens,
+                                   adaptive_chunking=adaptive_chunking)
         # the engine's page_holders audits scheduler-held payloads
         # (ready-but-unadmitted prefills) through this reference; the
         # cluster-level handle lets benches/tests read step and stall
@@ -946,7 +1207,7 @@ class EPDCluster:
             self._submit_continuous(req, sched, tl, router)
         done: List[Request] = []
         steps = 0
-        while (sched.has_work
+        while (sched.has_work or self._reroute_queue
                or any(self.decode_engines[i].n_active
                       or self.decode_engines[i].preempted
                       for i in self.live_decode_indices())):
@@ -955,6 +1216,14 @@ class EPDCluster:
                 raise RuntimeError(
                     f"continuous drain made no progress in {max_steps} "
                     f"steps (stalls: {sched.stall_counts})")
+            # mid-iteration failure domains first: a decode instance may
+            # crash between any two steps — its in-flight + preempted
+            # requests re-enter the scheduler as re-prefill jobs while
+            # everything else keeps stepping (no global drain)
+            if self.faults is not None:
+                self._maybe_crash(steps)
+            if self._reroute_queue:
+                self._harvest_reroutes(sched, tl, router)
             free = sum(len(self.decode_engines[i].free_slots())
                        for i in self.live_decode_indices())
             active = sum(self.decode_engines[i].n_active
@@ -970,25 +1239,52 @@ class EPDCluster:
                                   n_admit=len(plan.admit)):
                 for job in plan.admit:
                     first, payload = job.result
+                    # a crash-harvested job resumes the ORIGINAL request
+                    # on the survivor: re-prefilled KV + insert with
+                    # append_token=False at the exact decode position
+                    resume = job.meta.get("resume")
+                    req = resume[0] if resume is not None else job.req
+                    tok = resume[1] if resume is not None else first
+                    append = resume is None
                     try:
-                        engine = self.transfer_and_insert(
-                            job.req, payload, first)
+                        if self.faults is not None:
+                            engine = self._admit_with_faults(
+                                job, req, payload, tok, append, sched, tl)
+                            if engine is None:
+                                continue      # parked behind retry_at
+                        else:
+                            engine = self.transfer_and_insert(
+                                req, payload, tok, append_token=append)
                     except (NoFreeSlot, PoolExhausted):
                         # insert raises before any mutation; the payload
                         # stays with the job for the next attempt
                         self.report.admission_denials += 1
                         sched.requeue_ready(job)
                         continue
+                    except TransferError:
+                        # retry + grouped replan exhausted (or recovery
+                        # off): surface the loss — never a silent drop
+                        if self.paged:
+                            pe.release_payload(payload)
+                        req.killed = True
+                        self.report.lost.append(req)
+                        self.acc.close(req.request_id)
+                        progressed += 1
+                        continue
+                    if resume is not None:
+                        self.report.reroutes += 1
                     p = self.report.kv_plans[-1]
                     # KV-transfer exposure is handshake round-trip
                     # latency, not link occupancy (wire bytes move in
                     # microseconds): it gates THIS request's decode
                     # join but does not keep the Decode device busy.
                     # The serial driver blocks on each transfer, so the
-                    # fused baseline still pays it as device time.
+                    # fused baseline still pays it as device time. A
+                    # parked job's retry_at barrier gates the join too.
                     tl.charge_decode(
                         0.0,
-                        not_before=job.meta.get("prefill_done", 0.0)
+                        not_before=max(job.meta.get("prefill_done", 0.0),
+                                       job.retry_at)
                         + max(0.0, p.exposed_latency))
                     router.on_decode_join(engine.name)
                     n_admitted += 1
@@ -998,7 +1294,7 @@ class EPDCluster:
                         n_chunked += 1
                         progressed += 1
                 decoded = plan.decode and self._decode_iteration(
-                    done, tl, router)
+                    done, tl, router, sched)
                 if decoded:
                     progressed += 1
             # same scheduler telemetry the fused-engine execute_plan
@@ -1014,12 +1310,15 @@ class EPDCluster:
             if n_chunked and (n_admitted or decoded):
                 M.counter("sched_mixed_steps_total", engine=pe.name).inc()
             if not progressed:
-                # nothing executed: either every live job waits on a
-                # FUTURE arrival (jump the modeled clock to it), or the
-                # prefill pool is deadlocked by partial in-flight tasks
-                # (abort the youngest and requeue it)
-                t = sched.next_barrier_time()
-                if t is not None and t > tl.t_prefill:
+                # nothing executed: either some job waits on a FUTURE
+                # arrival (jump the modeled clock to the earliest one —
+                # a pool-stalled job's elapsed barrier must not mask a
+                # parked job's retry_at, or the retry never matures and
+                # its payload pages deadlock the pool), or the prefill
+                # pool is deadlocked by partial in-flight tasks (abort
+                # the youngest and requeue it)
+                t = sched.next_barrier_time(after=tl.t_prefill)
+                if t is not None:
                     tl.t_prefill = t
                 elif not self._restart_one_prefill(sched):
                     raise RuntimeError(
@@ -1033,5 +1332,7 @@ class EPDCluster:
                 # prefill stream drained: collapse the Router's stale
                 # busy_until so the replica reads idle again
                 router.on_idle(pe.name, tl.t_prefill)
+            if on_step is not None:
+                on_step(steps)
         self._finalize(done)
         return done

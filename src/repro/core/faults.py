@@ -359,6 +359,19 @@ class RetryPolicy:
             d *= 1.0 + self.jitter * (2.0 * u - 1.0)
         return d
 
+    def next_retry_at(self, now: float, attempt: int,
+                      key: Any = None) -> Optional[float]:
+        """Non-blocking variant of :meth:`backoff`: the absolute clock
+        time retry number ``attempt`` may run, or None when the policy
+        is exhausted (``attempt`` would exceed ``max_attempts`` — the
+        caller escalates to the next recovery arm instead of parking).
+        A scheduler parks the failed operation with this clock as a
+        ``retry_at`` barrier and composes the plan around it, rather
+        than sleeping through the backoff in a synchronous retry loop."""
+        if attempt >= self.max_attempts:
+            return None
+        return now + self.backoff(attempt, key=key)
+
     def worst_case_retry_time(self) -> float:
         """Upper bound on the cumulative backoff of one operation —
         what a latency SLO must absorb per recovery (benchmarks assert

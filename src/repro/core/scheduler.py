@@ -89,6 +89,7 @@ class InstanceStatus:
     active_decode: int = 0         # requests in the decode batch
     pending_tokens: float = 0.0    # queued prompt tokens (work estimate)
     busy_until: float = 0.0        # latest known completion estimate
+    down: bool = False             # instance crashed; never dispatch to it
     # per-request pending ledger: rid -> tokens still outstanding. Guards
     # the aggregate against double-retirement when both on_start and
     # chunk-granular on_prefill_progress report the same work.
@@ -141,10 +142,12 @@ class Router:
         token weight: the longest match wins among comparably loaded
         instances, but never outweighs a deep backlog."""
         cands = [self.status[i.name]
-                 for i in self.deployment.stage_instances(stage)]
+                 for i in self.deployment.stage_instances(stage)
+                 if not self.status[i.name].down]
         if not cands:
             raise ValueError(
-                f"deployment {self.deployment.name} has no {stage} instance")
+                f"deployment {self.deployment.name} has no live "
+                f"{stage} instance")
         if prefer is not None:
             for c in cands:
                 if c.spec.name == prefer:
@@ -218,3 +221,16 @@ class Router:
     def on_decode_leave(self, name: str) -> None:
         st = self.status[name]
         st.active_decode = max(0, st.active_decode - 1)
+
+    def on_instance_down(self, name: str) -> None:
+        """The fault plane killed instance ``name``: zero its occupancy
+        (its queue, batch, and backlog died with it — the harvested
+        requests re-enqueue elsewhere and must not double-count here)
+        and mark it down so dispatch never picks it again."""
+        st = self.status[name]
+        st.down = True
+        st.queue_len = 0
+        st.active_decode = 0
+        st.pending_tokens = 0.0
+        st.busy_until = 0.0
+        st.pending_by_req.clear()

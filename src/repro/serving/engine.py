@@ -68,7 +68,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.batching import BatchPlan, IterationScheduler, PrefillJob
-from repro.core.faults import FaultInjector, NoFreeSlot, SwapLost
+from repro.core.faults import (FaultInjector, InstanceDown, NoFreeSlot,
+                               SwapLost)
 from repro.core.scheduler import VictimCandidate, pick_preemption_victim
 from repro.core.telemetry import (NULL_TRACER, LatencyAccountant,
                                   MetricsRegistry, Tracer)
@@ -486,6 +487,10 @@ class Engine:
                                           engine=name)
         self._m_lost = M.counter("lost_requests_total", engine=name)
         self.lost: List[Request] = []
+        # a crashed instance is gone: serving calls raise InstanceDown
+        # instead of silently running against a pool that no longer
+        # exists. Set via mark_crashed() by the cluster's fault plane.
+        self.crashed = False
         # swap/refault work done inside engine calls, to be reclassified
         # in the accountant's ledger by the cluster after its next
         # sync() (the time is already charged under the request's state;
@@ -1056,6 +1061,8 @@ class Engine:
         ``output_tokens`` already contain it (the token is only the next
         decode input, not new progress).
         """
+        if self.crashed:
+            raise InstanceDown(self.name, 0)
         free = self.free_slots()
         if not free:
             raise NoFreeSlot()
@@ -1159,6 +1166,19 @@ class Engine:
         # a freed slot's decode writes land on the trash page.
         self.caches["pages"] = self.caches["pages"].at[slot].set(0)
 
+    def mark_crashed(self) -> List[Request]:
+        """The fault plane declared this instance dead: harvest every
+        request it owned — active slots plus parked preemptees — for the
+        cluster's re-route arm, and flip ``crashed`` so later serving
+        calls raise :class:`InstanceDown` instead of quietly computing
+        against a pool that no longer exists. Slot/pool state is NOT
+        unwound (the device is gone, there is nothing to free into);
+        leak audits exclude crashed instances."""
+        self.crashed = True
+        out = [r for r in self.slots if r is not None]
+        out += [pr.req for pr in self.preempted]
+        return out
+
     def decode_step(self) -> List[Tuple[Request, int, bool]]:
         """One lock-step decode over all slots. Returns (req, token, done)
         for every ACTIVE slot (inactive slots compute but are ignored).
@@ -1169,6 +1189,8 @@ class Engine:
         ``tracer.decode_sample`` steps (this is the highest-frequency
         phase; per-step spans at production rates would dominate the
         trace)."""
+        if self.crashed:
+            raise InstanceDown(self.name, 0)
         self._decode_steps += 1
         if self.tracer.want_decode_span(self._decode_steps):
             with self.tracer.span("decode.step", track=self.name,

@@ -311,9 +311,24 @@ def test_cluster_continuous_multimodal_text_mix(smollm):
         d.assert_no_page_leaks()
 
 
-def test_cluster_continuous_rejects_fault_plans(smollm):
+def test_cluster_continuous_accepts_fault_plans(smollm):
+    """The fault-plan guard is gone: run_continuous composes with the
+    chaos layer. Under seeded wire loss every request still completes
+    bit-identical to the zero-fault run (deeper matrix lives in
+    tests/test_batching_faults.py)."""
     cfg, params = smollm
-    from repro.core.faults import FaultPlan
-    cl = _cluster(cfg, params, faults=FaultPlan(seed=1))
-    with pytest.raises(ValueError, match="fault injection"):
-        cl.run_continuous([Request(prompt_tokens=[1, 2, 3])])
+    from repro.core.faults import SITE_TRANSFER_WIRE, FaultPlan
+    cl0 = _cluster(cfg, params, prefix_cache=True)
+    ref = [Request(prompt_tokens=p, max_new_tokens=6) for p in PROMPTS]
+    cl0.run_continuous(ref)
+
+    plan = FaultPlan(seed=7, rates={SITE_TRANSFER_WIRE: 0.3})
+    cl = _cluster(cfg, params, prefix_cache=True, faults=plan)
+    reqs = [Request(prompt_tokens=p, max_new_tokens=6) for p in PROMPTS]
+    done = cl.run_continuous(reqs)
+    assert len(done) == len(reqs) and not cl.report.lost
+    assert [r.output_tokens for r in reqs] == \
+        [r.output_tokens for r in ref]
+    cl.prefill_engine.assert_no_page_leaks()
+    for d in cl.decode_engines:
+        d.assert_no_page_leaks()
